@@ -1,0 +1,34 @@
+"""Reproduces paper Fig. 3 + Fig. 6: MAE/MSE of the CORDIC config-AF vs
+CORDIC stage count and FxP precision (Monte-Carlo, 2^(N/2)+1 samples,
+uniform inputs, numpy reference — the paper's §IV protocol)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.pareto import af_error
+
+# the paper's Pareto points (hr, lv) per precision
+PARETO = {4: (4, 4), 8: (4, 5), 16: (4, 5), 32: (8, 10)}
+
+
+def run(csv_rows):
+    t0 = time.time()
+    print("# Fig.3/6 — CORDIC AF error vs stages (MAE):")
+    print(f"{'af':9s} {'bits':>4s} " + " ".join(f"st={s:<2d}" for s in
+                                                (2, 3, 4, 5, 8, 10)))
+    for af in ("sigmoid", "tanh", "softmax"):
+        for bits in (4, 8, 16, 32):
+            maes = []
+            for st in (2, 3, 4, 5, 8, 10):
+                p = af_error(af, bits, min(st, 12), st)
+                maes.append(p.mae)
+            print(f"{af:9s} {bits:>4d} " +
+                  " ".join(f"{m:.4f}" for m in maes))
+    # headline: Pareto operating points
+    for af in ("sigmoid", "tanh", "softmax"):
+        for bits, (hr, lv) in PARETO.items():
+            p = af_error(af, bits, hr, lv)
+            csv_rows.append((f"af_error/{af}/fxp{bits}@{hr},{lv}",
+                             (time.time() - t0) * 1e6 / 12,
+                             f"mae={p.mae:.5f};mse={p.mse:.6f}"))
+    return csv_rows

@@ -1,0 +1,31 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts —
+EXPERIMENTS.md §Roofline source. Reads results/dryrun/*.json (the compiled
+cost/memory/collective analysis) and derives the three terms against TPU
+v5e constants. No wall-clock measurement (CPU container); see §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import CHIP, analyse_record, format_table
+
+
+def run(csv_rows):
+    files = sorted(glob.glob("results/dryrun/*.json"))
+    if not files:
+        print("# roofline: no dry-run artifacts found (run "
+              "python -m repro.launch.dryrun --all --both-meshes first)")
+        return csv_rows
+    recs = [json.load(open(f)) for f in files]
+    rows = [analyse_record(r) for r in recs if r.get("status") == "ok"]
+    rows = [r for r in rows if r is not None]
+    print(format_table([r for r in rows if r["mesh"] == "16x16"]))
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        csv_rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                         r["bound_time_us"],
+                         f"bottleneck={r['bottleneck']};"
+                         f"mfu_bound={r['mfu_bound']:.3f}"))
+    return csv_rows

@@ -1,0 +1,56 @@
+"""Reproduces paper Tables IV/V throughput claims: 16x/8x/4x/1x relative
+throughput for FxP4/8/16/32 (SIMD lane model), iterative-vs-pipelined
+trade-off, plus measured wall-time of the packed vs unpacked fxp_gemm
+kernel (interpret mode on CPU: relative packing effect, not TPU time)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flexpe import FlexPEArray
+from repro.kernels.fxp_gemm.ops import fxp_gemm
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(csv_rows):
+    print("# Table IV/V — SIMD throughput model (8x8 array, steady state):")
+    base = FlexPEArray(8, "fxp32").gemm_cycles(2048, 2048, 2048,
+                                               include_fill=False)
+    for p in ("fxp4", "fxp8", "fxp16", "fxp32"):
+        arr = FlexPEArray(8, p)
+        cyc = arr.gemm_cycles(2048, 2048, 2048, include_fill=False)
+        perf = arr.gemm_perf(2048, 2048, 2048)
+        ratio = base / cyc
+        print(f"  {p:6s} relative throughput {ratio:5.1f}x  "
+              f"(paper: {dict(fxp4=16, fxp8=8, fxp16=4, fxp32=1)[p]}x)  "
+              f"{perf.throughput_gops:8.1f} GOPS  {perf.gops_per_watt:6.1f} GOPS/W")
+        csv_rows.append((f"throughput/{p}", perf.cycles / arr.freq_hz * 1e6,
+                         f"rel={ratio:.2f}x;gops={perf.throughput_gops:.1f}"))
+    it = FlexPEArray(8, "fxp8", mode="iterative").gemm_cycles(512, 512, 512)
+    pi = FlexPEArray(8, "fxp8", mode="pipelined").gemm_cycles(512, 512, 512)
+    print(f"  iterative/pipelined cycle ratio: {it / pi:.1f}x "
+          "(paper: ~5x area/delay trade)")
+    csv_rows.append(("throughput/iter_vs_pipe", 0.0, f"ratio={it / pi:.2f}"))
+
+    print("# fxp_gemm kernel (interpret mode) — packed-int4 storage effect:")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 512)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(512, 256)).astype(np.float32))
+    for name, kw in (("fxp8", dict(precision="fxp8")),
+                     ("fxp4", dict(precision="fxp4")),
+                     ("fxp4-packed", dict(precision="fxp4", packed=True))):
+        us = _time(lambda x, y: fxp_gemm(x, y, **kw), a, b)
+        csv_rows.append((f"fxp_gemm/{name}", us, "256x512x256"))
+        print(f"  {name:12s} {us:9.0f} us/call")
+    return csv_rows

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure:
+
+  bench_af_error     Fig. 3 + Fig. 6 (CORDIC AF error vs stages/precision)
+  bench_throughput   Tables IV/V (SIMD 16/8/4/1 throughput; iter vs pipe)
+  bench_dma          §IV-A (DMA-read reductions, VGG-16/AlexNet)
+  bench_systolic     Table VIII (8x8 array GOPS/W)
+  bench_accuracy     Fig. 5 (<2% accuracy with CORDIC MAC+SST)
+  bench_roofline     EXPERIMENTS.md §Roofline (from dry-run artifacts)
+
+Prints ``name,us_per_call,derived`` CSV at the end.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_accuracy, bench_af_error, bench_dma, bench_roofline,
+                   bench_systolic, bench_throughput)
+    rows = []
+    for mod in (bench_af_error, bench_throughput, bench_dma, bench_systolic,
+                bench_accuracy, bench_roofline):
+        print(f"\n==== {mod.__name__} ====")
+        try:
+            mod.run(rows)
+        except Exception:
+            traceback.print_exc()
+            print(f"!! {mod.__name__} failed", file=sys.stderr)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

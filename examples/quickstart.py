@@ -1,0 +1,50 @@
+"""Quickstart — the Flex-PE public API in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FORMATS, FlexPE, FlexPEArray, PrecisionPolicy,
+                        fake_quant, flex_af)
+from repro.kernels.cordic_softmax.ops import cordic_softmax
+from repro.kernels.fxp_gemm.ops import fxp_gemm
+
+rng = np.random.default_rng(0)
+
+# 1. Runtime-configurable activation function (the paper's config-AF):
+#    one datapath, AF selected by Sel_AF, precision by precision_sel.
+x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32) * 2)
+for af in ("sigmoid", "tanh", "relu", "softmax"):
+    y = flex_af(x, af, precision="fxp8", impl="cordic")
+    print(f"flex_af[{af:8s}] -> {np.asarray(y)[0, :4].round(3)}")
+
+# 2. One Flex-PE: same hardware does MAC (CORDIC LR mode) and AFs.
+pe = FlexPE(precision="fxp16")
+a, b = jnp.asarray([0.5, -0.25]), jnp.asarray([3.0, 1.5])
+print("PE MAC  a*b      ->", np.asarray(pe(a, ctrl_op="mac", b=b)))
+print("PE AF   sigmoid  ->", np.asarray(pe(a, ctrl_op="af", sel_af="sigmoid")))
+
+# 3. Multi-precision SIMD quantized GEMM (Pallas kernel, int accumulate):
+A = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+B = jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32))
+for prec in ("fxp8", "fxp4"):
+    out = fxp_gemm(A, B, prec, af="relu")
+    rel = float(jnp.linalg.norm(out - jnp.maximum(A @ B, 0))
+                / jnp.linalg.norm(jnp.maximum(A @ B, 0)))
+    print(f"fxp_gemm[{prec}] fused-relu rel-err {rel:.3f}")
+
+# 4. The systolic-array model: the paper's 16/8/4/1 throughput law.
+for prec in ("fxp4", "fxp8", "fxp16", "fxp32"):
+    arr = FlexPEArray(8, prec)
+    perf = arr.gemm_perf(1024, 1024, 1024)
+    print(f"8x8 array [{prec:6s}] {perf.throughput_gops:7.1f} GOPS  "
+          f"{perf.gops_per_watt:7.1f} GOPS/W")
+
+# 5. A PrecisionPolicy threads all of this through any model in the zoo:
+pol = PrecisionPolicy.flexpe(8)
+print("policy:", pol.name, "| matmul", pol.matmul, "| AF impl", pol.af_impl,
+      "| kv cache", pol.kv_cache)
+sm = cordic_softmax(jnp.asarray(rng.normal(size=(2, 1024)).astype(np.float32)))
+print("cordic_softmax row sums:", np.asarray(jnp.sum(sm, -1)).round(4))

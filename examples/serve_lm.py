@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + decode with the Flex-PE FxP8 policy
+(quantized matmuls, CORDIC attention softmax, FxP8-quantized KV cache).
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2_370m --gen 32
+"""
+import sys
+
+from repro.launch import serve as S
+
+
+def main():
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "qwen2_5_14b"] + argv
+    argv += ["--reduced", "--batch", "4", "--prompt-len", "16", "--gen", "12",
+             "--policy", "flexpe-fxp8"]
+    S.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end training driver: a ~100M-param LM trained with the full
+production stack (sharded state, Flex-PE FxP8 policy, WSD schedule,
+fault-tolerant loop with checkpoints) on the synthetic token stream.
+
+    PYTHONPATH=src python examples/train_lm.py              # quick demo
+    PYTHONPATH=src python examples/train_lm.py --full       # ~100M, 300 steps
+
+The same entrypoint drives the production mesh: swap --mesh host for
+--mesh production on a pod slice (see src/repro/launch/train.py).
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.launch import train as T
+
+LM_100M = ModelConfig(
+    name="lm-100m", family="dense", n_layers=10, d_model=640, n_heads=10,
+    n_kv_heads=5, d_ff=2560, vocab=50304, act="silu", norm="rmsnorm",
+    rope=True, max_seq=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 300 steps (hours on CPU; the "
+                         "config a TPU host would run)")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.full:
+        import repro.configs.base as B
+        import repro.launch.train as LT
+        # register the 100M config under a temporary id
+        cfg = LM_100M
+        steps = args.steps or 300
+        batch, seq = 32, 1024
+    else:
+        cfg = dataclasses.replace(
+            LM_100M, name="lm-demo", n_layers=4, d_model=256, n_heads=4,
+            n_kv_heads=2, d_ff=1024, vocab=2048)
+        steps = args.steps or 60
+        batch, seq = 8, 128
+
+    # drive the launcher programmatically with an in-memory config
+    import repro.launch.train as LT
+    orig_get = LT.get_config
+    LT.get_config = lambda _: cfg
+    try:
+        summary = LT.main([
+            "--arch", "minicpm_2b",  # placeholder id; cfg overridden above
+            "--steps", str(steps), "--batch", str(batch), "--seq", str(seq),
+            "--policy", "flexpe-fxp8", "--schedule", "wsd",
+            "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "50"])
+    finally:
+        LT.get_config = orig_get
+    hist = summary["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    print("OK: loss decreased", hist[0]["loss"], "->", hist[-1]["loss"])
+
+
+if __name__ == "__main__":
+    main()

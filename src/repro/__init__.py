@@ -1,0 +1,2 @@
+"""repro — Flex-PE multi-precision JAX training/serving framework."""
+__version__ = "1.0.0"

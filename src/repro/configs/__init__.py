@@ -1,0 +1,1 @@
+from .base import ARCH_IDS, SHAPES, SUBQUADRATIC, ModelConfig, arch_shapes, get_config

@@ -1,0 +1,16 @@
+"""Flex-PE core: CORDIC engine, FxP quantization, SIMD packing, configurable
+activation functions, precision policy, systolic/DMA models."""
+from .activation import AF_NAMES, flex_af
+from .cordic import PARETO_STAGES
+from .flexpe import FlexPE, FlexPEArray
+from .fxp import (FORMATS, FXP4, FXP8, FXP16, FXP32, FxPFormat, dequantize,
+                  fake_quant, fake_quant_ste, quantize)
+from .precision import PrecisionPolicy, qeinsum, qmatmul
+from .simd import pack, packed_len, unpack
+
+__all__ = [
+    "AF_NAMES", "flex_af", "PARETO_STAGES", "FlexPE", "FlexPEArray",
+    "FORMATS", "FXP4", "FXP8", "FXP16", "FXP32", "FxPFormat", "dequantize",
+    "fake_quant", "fake_quant_ste", "quantize", "PrecisionPolicy",
+    "qeinsum", "qmatmul", "pack", "packed_len", "unpack",
+]

@@ -1,0 +1,147 @@
+"""Runtime-configurable multi-precision activation functions (paper §III).
+
+`flex_af` is the software contract of the Flex-PE AF datapath: one entry
+point, AF selected by `af` (the hardware's Sel_AF register), precision by
+`precision` (the precision_sel register), CORDIC stage counts defaulting to
+the paper's Pareto points.
+
+CORDIC compositions (paper Fig. 4):
+  sigmoid(x) : HR exp + LV divide     e^x / (1 + e^x)
+  tanh(x)    : HR exp + LV divide     stabilised via t = e^{-2|x|}
+  softmax(x) : HR exp (+ FIFO sum) + LV divide
+  relu(x)    : mux
+  silu/gelu  : x * sigmoid(·) — paper §IV-B: "easily extended to Swish and
+               GELU with the same CORDIC hardware"
+
+`range_mode`:
+  * "extended" (default): exp inputs are range-reduced (z = k ln2 + r,
+    e^z = 2^k e^r — an exact barrel shift in hardware). Needed when AF inputs
+    are not pre-normalised (model integration).
+  * "normalized": paper-faithful raw CORDIC, valid for |z| <= 1.1182; used by
+    the Fig. 3/6 error reproduction where inputs follow the paper's protocol.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import cordic
+from .cordic import PARETO_STAGES
+from .fxp import FORMATS, fake_quant
+
+__all__ = ["flex_af", "AF_NAMES", "cordic_sigmoid", "cordic_tanh",
+           "cordic_softmax", "cordic_exp", "default_stages"]
+
+AF_NAMES = ("sigmoid", "tanh", "relu", "softmax", "silu", "gelu", "exp",
+            "identity")
+
+
+def default_stages(precision: Optional[str]) -> tuple[int, int]:
+    """(hr_stages, lv_stages) from the paper's Pareto analysis."""
+    bits = FORMATS[precision].bits if precision else 16
+    hr, lv, _ = PARETO_STAGES[bits]
+    return hr, lv
+
+
+def softmax_lv_stages(row_len: int, precision: Optional[str] = None) -> int:
+    """LV stages for an N-way softmax. The paper's 5-stage Pareto point
+    targets its classification-layer softmax (10–100 classes); an N-way
+    softmax emits quotients ~1/N, below the 2^-5 LV resolution for large N.
+    Scale stages with log2(N) (+6 guard bits) — in hardware this is more
+    time-multiplexed iterative cycles on the same LV datapath, which the
+    paper's iterative mode supports; cap at 24 (FxP32 fraction width)."""
+    _, lv, _ = PARETO_STAGES[FORMATS[precision].bits if precision else 16]
+    need = int(math.ceil(math.log2(max(row_len, 2)))) + 6
+    return max(lv, min(need, 24))
+
+
+def _exp(z, hr_stages, range_mode):
+    if range_mode == "extended":
+        return cordic.extended_exp_float(z, hr_stages)
+    return cordic.exp_float(z, hr_stages)
+
+
+def cordic_exp(x, hr_stages=4, range_mode="extended"):
+    return _exp(x, hr_stages, range_mode)
+
+
+def cordic_sigmoid(x, hr_stages=4, lv_stages=5, range_mode="extended"):
+    # sigma(x) = e^min(x,0) / (1 + e^-|x|): exp arg <= 0 (no overflow) and
+    # |num| <= |den| (LV convergence) always hold.
+    e = _exp(-jnp.abs(x), hr_stages, range_mode)
+    num = jnp.where(x >= 0, jnp.ones_like(e), e)
+    den = 1.0 + e
+    return cordic.lv_divide_float(num, den, lv_stages)
+
+
+def cordic_tanh(x, hr_stages=4, lv_stages=5, range_mode="extended"):
+    if range_mode == "normalized":
+        # paper-faithful direct form: tanh = sinh/cosh, |x| <= 1.1182
+        c, s = cordic.hr_coshsinh_float(x, hr_stages)
+        return cordic.lv_divide_float(s, c, lv_stages)
+    t = _exp(-2.0 * jnp.abs(x), hr_stages, range_mode)
+    mag = cordic.lv_divide_float(1.0 - t, 1.0 + t, lv_stages)
+    return jnp.sign(x) * mag
+
+
+def cordic_softmax(x, hr_stages=4, lv_stages=5, axis=-1,
+                   range_mode="extended"):
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = _exp(x - m, hr_stages, range_mode)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return cordic.lv_divide_float(e, jnp.broadcast_to(s, e.shape), lv_stages)
+
+
+def flex_af(x: jax.Array, af: str, precision: Optional[str] = None,
+            impl: str = "cordic", stages: Optional[tuple[int, int]] = None,
+            axis: int = -1, range_mode: str = "extended") -> jax.Array:
+    """The Flex-PE activation-function datapath.
+
+    Args:
+      x: input tensor.
+      af: one of AF_NAMES (runtime Sel_AF).
+      precision: FxP format name ('fxp4'...'fxp32') or None (no quantization).
+      impl: 'cordic' (paper datapath) or 'exact' (reference nonlinearity).
+      stages: optional (hr, lv) override; defaults to the Pareto point.
+      axis: softmax axis.
+    """
+    if af == "identity":
+        return x
+    orig_dtype = x.dtype
+    if precision is not None:
+        x = fake_quant(x, FORMATS[precision])
+    if af == "relu":  # mux path — precision-quantized but no CORDIC
+        out = jnp.maximum(x, 0)
+    elif impl == "exact":
+        out = {
+            "sigmoid": jax.nn.sigmoid,
+            "tanh": jnp.tanh,
+            "softmax": partial(jax.nn.softmax, axis=axis),
+            "silu": jax.nn.silu,
+            "gelu": jax.nn.gelu,
+            "exp": jnp.exp,
+        }[af](x.astype(jnp.float32))
+    else:
+        hr, lv = stages if stages is not None else default_stages(precision)
+        xf = x.astype(jnp.float32)
+        if af == "sigmoid":
+            out = cordic_sigmoid(xf, hr, lv, range_mode)
+        elif af == "tanh":
+            out = cordic_tanh(xf, hr, lv, range_mode)
+        elif af == "softmax":
+            out = cordic_softmax(xf, hr, lv, axis, range_mode)
+        elif af == "exp":
+            out = cordic_exp(xf, hr, range_mode)
+        elif af == "silu":
+            out = xf * cordic_sigmoid(xf, hr, lv, range_mode)
+        elif af == "gelu":
+            out = xf * cordic_sigmoid(1.702 * xf, hr, lv, range_mode)
+        else:
+            raise ValueError(f"unknown af {af!r}")
+    if precision is not None:
+        out = fake_quant(out, FORMATS[precision])
+    return out.astype(orig_dtype)

@@ -1,0 +1,259 @@
+"""Unified CORDIC engine (paper §II) — HR / LV / LR modes.
+
+Three modes, one shift-add iteration structure (Eq. 2):
+  * Hyperbolic Rotational (HR): (X,Y,Z=z) -> (cosh z, sinh z, 0);  exp = X+Y
+  * Linear Vectoring   (LV): (X=den, Y=num, Z=0) -> Z = num/den
+  * Linear Rotational  (LR): (X=a, Y=acc, Z=b) -> Y = acc + a*b   (the MAC)
+
+Each mode exists in two implementations:
+  * float-structural (`*_float`): float32 values, exact 2^-i scaling — used
+    inside models/kernels (fast, vectorized, jnp). This is what the hardware
+    computes up to FxP rounding.
+  * bit-accurate (`*_fxp`): int32 codes in a Q-format, arithmetic-shift
+    datapath with quantized E_i ROM tables — the hardware emulator, used as
+    the oracle in tests and the accuracy benchmark.
+
+Stage counts default to the paper's Pareto points (§II-E):
+  FxP4: 4/4/4,  FxP8: 4/5/5,  FxP16: 4/5/5,  FxP32: 8/10/9  (HR/LV/LR).
+
+Convergence (§II-D): HR |z| <= 1.1182, LV |num/den| <= 1, LR |b| <= 7.968
+(LR runs i = -2..n: 4,2,1,1/2,... giving the paper's ±7.968 range).
+Classic hyperbolic CORDIC repeats iterations {4, 13, 40}; the paper's tables
+run straight i=1..n, so `repeat_iters=False` is the faithful default.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fxp import FxPFormat, FORMATS
+
+__all__ = [
+    "PARETO_STAGES", "hyperbolic_gain", "hr_coshsinh_float", "exp_float",
+    "lv_divide_float", "lr_mac_float", "hr_coshsinh_fxp", "lv_divide_fxp",
+    "lr_mac_fxp", "extended_exp_float", "HR_MAX", "LV_MAX", "LR_MAX",
+    "hr_coshsinh_iterative", "lv_divide_iterative",
+]
+
+HR_MAX = 1.1182   # hyperbolic rotational convergence bound
+LV_MAX = 1.0      # |num/den| bound for linear vectoring
+LR_MAX = 7.968    # LR MAC range with i = -2..5 (paper §II-D)
+
+# Paper Pareto points: bits -> (hr_stages, lv_stages, lr_stages)
+PARETO_STAGES: dict[int, tuple[int, int, int]] = {
+    4: (4, 4, 4),
+    8: (4, 5, 5),
+    12: (4, 5, 5),
+    16: (4, 5, 5),
+    24: (8, 10, 9),
+    32: (8, 10, 9),
+}
+
+_HYPERBOLIC_REPEATS = (4, 13, 40)
+
+
+def _hr_schedule(stages: int, repeat_iters: bool) -> list[int]:
+    """Iteration indices for HR mode (i >= 1; optional classic repeats)."""
+    idx, i = [], 1
+    while len(idx) < stages:
+        idx.append(i)
+        if repeat_iters and i in _HYPERBOLIC_REPEATS and len(idx) < stages:
+            idx.append(i)
+        i += 1
+    return idx
+
+
+def hyperbolic_gain(stages: int, repeat_iters: bool = False,
+                    asymptotic: bool = False) -> float:
+    """K_h = prod sqrt(1 - 2^-2i). Paper fixes K_h = 0.8281 (asymptotic)."""
+    if asymptotic:
+        return 0.8281
+    g = 1.0
+    for i in _hr_schedule(stages, repeat_iters):
+        g *= math.sqrt(1.0 - 2.0 ** (-2 * i))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Float-structural implementations (vectorized; unrolled = "pipelined" mode)
+# ---------------------------------------------------------------------------
+
+def hr_coshsinh_float(z: jax.Array, stages: int, repeat_iters: bool = False,
+                      asymptotic_gain: bool = False):
+    """HR mode: returns (cosh z, sinh z) approximations. |z| <= HR_MAX."""
+    k = hyperbolic_gain(stages, repeat_iters, asymptotic_gain)
+    x = jnp.full_like(z, 1.0 / k)
+    y = jnp.zeros_like(z)
+    for i in _hr_schedule(stages, repeat_iters):
+        e = math.atanh(2.0 ** (-i))
+        d = jnp.where(z >= 0, 1.0, -1.0)
+        x, y = x + d * y * (2.0 ** (-i)), y + d * x * (2.0 ** (-i))
+        z = z - d * e
+    return x, y
+
+
+def exp_float(z: jax.Array, stages: int, **kw) -> jax.Array:
+    """e^z = cosh z + sinh z (paper Eq. 1). |z| <= HR_MAX."""
+    c, s = hr_coshsinh_float(z, stages, **kw)
+    return c + s
+
+
+_LN2 = math.log(2.0)
+
+
+def extended_exp_float(z: jax.Array, stages: int,
+                       repeat_iters: bool = True, **kw) -> jax.Array:
+    """Range-extended exp: z = k*ln2 + r, e^z = 2^k * e^r.
+
+    The 2^k factor is an exact barrel shift in fixed-point hardware; this is
+    the TPU-idiomatic (and hardware-idiomatic) way to use CORDIC exp outside
+    its convergence range, needed when AF inputs are not pre-normalised.
+
+    Defaults to `repeat_iters=True` (classic convergence repair — without
+    repeating iteration 4, hyperbolic CORDIC leaves a worst-case residual
+    |z| ≈ 0.047 near z=0, a ~5%% exp error). The paper's no-repeat schedule
+    is available via repeat_iters=False and remains the default elsewhere.
+    """
+    z = jnp.clip(z, -87.0, 88.0)  # f32 exp range; hardware saturation
+    k = jnp.floor(z * (1.0 / _LN2) + 0.5)
+    r = z - k * _LN2  # r in [-ln2/2, ln2/2] ⊂ [-HR_MAX, HR_MAX]
+    return exp_float(r, stages, repeat_iters=repeat_iters, **kw) * jnp.exp2(k)
+
+
+def lv_divide_float(num: jax.Array, den: jax.Array, stages: int) -> jax.Array:
+    """LV mode: num/den via shift-add. Requires |num| <= |den| (|q| <= 1)."""
+    x, y = den, num
+    zq = jnp.zeros_like(num)
+    for i in range(1, stages + 1):
+        d = -jnp.sign(x * y)
+        d = jnp.where(d == 0, 1.0, d)
+        y = y + d * x * (2.0 ** (-i))
+        zq = zq - d * (2.0 ** (-i))
+    return zq
+
+
+def lr_mac_float(a: jax.Array, b: jax.Array, acc: jax.Array, stages: int,
+                 i_start: int = -2) -> jax.Array:
+    """LR mode MAC: acc + a*b via shift-add. |b| <= sum 2^-i (±7.968)."""
+    x, y, z = a, acc, b
+    for i in range(i_start, i_start + stages):
+        d = jnp.where(z >= 0, 1.0, -1.0)
+        y = y + d * x * (2.0 ** (-i))
+        z = z - d * (2.0 ** (-i))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Bit-accurate integer (hardware-emulation) implementations
+# ---------------------------------------------------------------------------
+
+def _q(v: float, frac: int) -> int:
+    return int(round(v * (1 << frac)))
+
+
+def _shr(v: jax.Array, i: int) -> jax.Array:
+    """Arithmetic shift; negative i = left shift (LR i_start=-2 lanes)."""
+    if i >= 0:
+        return jnp.right_shift(v, i)
+    return jnp.left_shift(v, -i)
+
+
+def hr_coshsinh_fxp(z_codes: jax.Array, fmt: FxPFormat, stages: int,
+                    repeat_iters: bool = False):
+    """Bit-accurate HR mode on integer codes in Q(fmt.frac). Returns codes."""
+    frac = fmt.frac
+    k = hyperbolic_gain(stages, repeat_iters)
+    x = jnp.full_like(z_codes, _q(1.0 / k, frac), dtype=jnp.int32)
+    y = jnp.zeros_like(z_codes, dtype=jnp.int32)
+    z = z_codes.astype(jnp.int32)
+    for i in _hr_schedule(stages, repeat_iters):
+        e = _q(math.atanh(2.0 ** (-i)), frac)
+        pos = z >= 0
+        xs, ys = _shr(x, i), _shr(y, i)
+        x = jnp.where(pos, x + ys, x - ys)
+        y = jnp.where(pos, y + xs, y - xs)
+        z = jnp.where(pos, z - e, z + e)
+    return x, y
+
+
+def lv_divide_fxp(num_codes: jax.Array, den_codes: jax.Array, fmt: FxPFormat,
+                  stages: int) -> jax.Array:
+    """Bit-accurate LV division on integer codes; result in Q(fmt.frac)."""
+    frac = fmt.frac
+    x = den_codes.astype(jnp.int32)
+    y = num_codes.astype(jnp.int32)
+    z = jnp.zeros_like(x)
+    for i in range(1, stages + 1):
+        d_pos = (x * y) < 0  # d = +1 when sign(x*y) < 0
+        step = _q(2.0 ** (-i), frac)
+        xs = _shr(x, i)
+        y = jnp.where(d_pos, y + xs, y - xs)
+        z = jnp.where(d_pos, z - step, z + step)
+    return z
+
+
+def lr_mac_fxp(a_codes: jax.Array, b_codes: jax.Array, acc_codes: jax.Array,
+               fmt: FxPFormat, stages: int, i_start: int = -2) -> jax.Array:
+    """Bit-accurate LR MAC on integer codes; acc + a*b in Q(fmt.frac)."""
+    frac = fmt.frac
+    x = a_codes.astype(jnp.int32)
+    y = acc_codes.astype(jnp.int32)
+    z = b_codes.astype(jnp.int32)
+    for i in range(i_start, i_start + stages):
+        step = _q(2.0 ** (-i), frac)
+        pos = z >= 0
+        xs = _shr(x, i)
+        y = jnp.where(pos, y + xs, y - xs)
+        z = jnp.where(pos, z - step, z + step)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Iterative-mode implementations (paper's area-efficient edge mode)
+# ---------------------------------------------------------------------------
+# The pipelined mode above unrolls stages (hardware pipelining / ILP); the
+# iterative mode reuses ONE stage `n` times via lax.fori_loop with the E_i
+# ROM as a gathered table — the same latency/area trade the paper's FSM
+# makes. Bit-identical to the unrolled path (same schedule, same constants).
+
+def hr_coshsinh_iterative(z: jax.Array, stages: int,
+                          repeat_iters: bool = False):
+    """HR mode via fori_loop (iterative PE). Returns (cosh z, sinh z)."""
+    sched = _hr_schedule(stages, repeat_iters)
+    pow2 = jnp.asarray([2.0 ** (-i) for i in sched], jnp.float32)
+    etab = jnp.asarray([math.atanh(2.0 ** (-i)) for i in sched], jnp.float32)
+    k = hyperbolic_gain(stages, repeat_iters)
+
+    def body(i, carry):
+        x, y, zz = carry
+        d = jnp.where(zz >= 0, 1.0, -1.0)
+        p = pow2[i]
+        x, y = x + d * y * p, y + d * x * p
+        zz = zz - d * etab[i]
+        return x, y, zz
+
+    x0 = jnp.full_like(z, 1.0 / k)
+    y0 = jnp.zeros_like(z)
+    x, y, _ = jax.lax.fori_loop(0, len(sched), body, (x0, y0, z))
+    return x, y
+
+
+def lv_divide_iterative(num: jax.Array, den: jax.Array,
+                        stages: int) -> jax.Array:
+    """LV mode via fori_loop (iterative PE). num/den, |num| <= |den|."""
+    def body(i, carry):
+        x, y, q = carry
+        p = 0.5 * jnp.exp2(-i.astype(jnp.float32))  # 2^-(i+1), i = 0..n-1
+        d = -jnp.sign(x * y)
+        d = jnp.where(d == 0, 1.0, d)
+        y = y + d * x * p
+        q = q - d * p
+        return x, y, q
+
+    q0 = jnp.zeros_like(num)
+    _, _, q = jax.lax.fori_loop(0, stages, body, (den, num, q0))
+    return q

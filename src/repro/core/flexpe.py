@@ -1,0 +1,137 @@
+"""FlexPE — the unified MAC + AF processing element, and the systolic-array
+performance/energy model used by the paper's Tables IV/V/VIII.
+
+`FlexPE.__call__` is the functional contract of one PE: ctrl_op selects MAC
+or AF, Sel_AF selects the nonlinearity, precision_sel the FxP mode; the MAC
+runs CORDIC LR mode, AFs run HR+LV (see core.cordic / core.activation).
+
+`FlexPEArray` models an NxN systolic array of Flex-PEs: cycle counts for
+GEMM at each precision (pipelined vs iterative mode), throughput (GOPS) and
+energy (GOPS/W) from the paper's post-synthesis numbers. This is the
+analytical model backing benchmarks/bench_throughput.py and
+benchmarks/bench_systolic.py; it is also how the SIMD 16/8/4/1 claim is
+validated quantitatively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import cordic
+from .activation import flex_af
+from .cordic import PARETO_STAGES
+from .fxp import FORMATS, FxPFormat, fake_quant
+
+__all__ = ["FlexPE", "FlexPEArray", "ArrayPerf"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlexPE:
+    """One Flex-PE. precision in {'fxp4','fxp8','fxp16','fxp32'};
+    mode in {'pipelined','iterative'}."""
+    precision: str = "fxp8"
+    mode: str = "pipelined"
+
+    @property
+    def fmt(self) -> FxPFormat:
+        return FORMATS[self.precision]
+
+    @property
+    def stages(self) -> tuple[int, int, int]:
+        return PARETO_STAGES[self.fmt.bits]
+
+    def mac(self, a: jax.Array, b: jax.Array, acc: jax.Array) -> jax.Array:
+        """CORDIC LR-mode MAC (RECON-style reconfigured datapath)."""
+        _, _, lr = self.stages
+        a = fake_quant(a, self.fmt)
+        b = fake_quant(b, self.fmt)
+        out = cordic.lr_mac_float(a, jnp.clip(b, -cordic.LR_MAX, cordic.LR_MAX),
+                                  acc, lr)
+        return out
+
+    def af(self, x: jax.Array, sel_af: str, axis: int = -1) -> jax.Array:
+        hr, lv, _ = self.stages
+        return flex_af(x, sel_af, precision=self.precision, impl="cordic",
+                       stages=(hr, lv), axis=axis)
+
+    def __call__(self, x, *, ctrl_op: str = "af", sel_af: str = "relu",
+                 b=None, acc=None, axis: int = -1):
+        if ctrl_op == "mac":
+            return self.mac(x, b, acc if acc is not None else jnp.zeros_like(x))
+        return self.af(x, sel_af, axis=axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayPerf:
+    cycles: float
+    throughput_gops: float
+    power_w: float
+    gops_per_watt: float
+    dma_bytes: float
+
+
+# Paper Table IV/V (28nm, 0.9V) per-PE power; pipelined config-AF column.
+_PE_POWER_MW = {"fxp4": 0.73 / 4, "fxp8": 1.5, "fxp16": 2.43, "fxp32": 3.37}
+# Paper Table VIII: 8x8 array @ VC707, 466 MHz, 2.24 W total, 8.42 GOPS/W.
+_ARRAY_FREQ_HZ = 466e6
+_ARRAY_POWER_W = 2.24
+
+
+@dataclasses.dataclass(frozen=True)
+class FlexPEArray:
+    """N x N systolic array of Flex-PEs (paper validates 8x8)."""
+    n: int = 8
+    precision: str = "fxp8"
+    mode: str = "pipelined"
+    freq_hz: float = _ARRAY_FREQ_HZ
+
+    @property
+    def fmt(self) -> FxPFormat:
+        return FORMATS[self.precision]
+
+    def gemm_cycles(self, m: int, k: int, n: int,
+                    include_fill: bool = True) -> float:
+        """Cycle model for an MxK @ KxN GEMM, output-stationary dataflow.
+
+        SIMD lanes multiply per-PE MAC throughput by the paper's 16/8/4/1
+        factor. Iterative mode pays `lr_stages` cycles per MAC; pipelined
+        mode retires one (SIMD) MAC per cycle per PE after pipeline fill.
+        The paper's pipelined AF loads operands over two cycles and emits a
+        result every alternate cycle at full utilisation (§III-B), which the
+        SIMD lanes hide; we charge the fill latency once per tile wave.
+        """
+        lanes = self.fmt.throughput_x
+        _, _, lr_stages = PARETO_STAGES[self.fmt.bits]
+        macs = m * k * n
+        per_cycle = self.n * self.n * lanes
+        if self.mode == "iterative":
+            per_cycle /= lr_stages
+        tiles = -(-m // self.n) * -(-n // self.n)
+        fill = tiles * (2 * self.n + (lr_stages if self.mode == "pipelined" else 0))
+        return macs / per_cycle + (fill if include_fill else 0)
+
+    def gemm_perf(self, m: int, k: int, n: int) -> ArrayPerf:
+        cyc = self.gemm_cycles(m, k, n)
+        secs = cyc / self.freq_hz
+        ops = 2.0 * m * k * n
+        gops = ops / secs / 1e9
+        power = _ARRAY_POWER_W * (_PE_POWER_MW[self.precision]
+                                  / _PE_POWER_MW["fxp8"]) ** 0.5
+        # DMA bytes with packed SIMD words (the storage-side SIMD win)
+        dma = (m * k + k * n) * self.fmt.bits / 8 + m * n * 4
+        return ArrayPerf(cyc, gops, power, gops / power, dma)
+
+    def gemm(self, a: jax.Array, b: jax.Array,
+             sel_af: Optional[str] = None) -> jax.Array:
+        """Functional GEMM through the quantized datapath with fused AF —
+        what the hardware computes (numerics, not timing)."""
+        fmt = self.fmt
+        a = fake_quant(a, fmt)
+        b = fake_quant(b, fmt)
+        out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        if sel_af is not None and sel_af != "identity":
+            out = flex_af(out, sel_af, precision=self.precision, impl="cordic")
+        return out

@@ -1,0 +1,75 @@
+"""Pareto analysis of CORDIC stage counts (paper §II-E, Fig. 3, Fig. 6).
+
+Monte-Carlo error simulation following the paper's protocol: uniformly
+distributed random inputs, 2^(N/2)+1 samples for N-bit precision, compared
+against numpy "true" outputs; MAE and MSE reported per (AF, precision,
+stages). `pareto_table` reproduces the paper's conclusion that 4 HR / 5 LV
+stages suffice for FxP8/16 and 8/10 for FxP32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from .activation import cordic_sigmoid, cordic_softmax, cordic_tanh
+from .fxp import FORMATS, fake_quant
+
+__all__ = ["ErrorPoint", "af_error", "pareto_table", "MC_SAMPLES"]
+
+
+def MC_SAMPLES(bits: int) -> int:
+    """Paper: 2^(N/2)+1 Monte-Carlo samples (min-capped for tiny N)."""
+    return max(2 ** (bits // 2) + 1, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorPoint:
+    af: str
+    bits: int
+    hr_stages: int
+    lv_stages: int
+    mae: float
+    mse: float
+
+
+def af_error(af: str, bits: int, hr_stages: int, lv_stages: int,
+             n_samples: int | None = None, seed: int = 0,
+             input_range: float = 1.0) -> ErrorPoint:
+    """MAE/MSE of the CORDIC AF vs numpy, paper's Monte-Carlo protocol."""
+    rng = np.random.default_rng(seed)
+    n = n_samples or MC_SAMPLES(bits)
+    x = rng.uniform(-input_range, input_range, size=(max(n, 8),)).astype(np.float32)
+    fmt = FORMATS[f"fxp{bits}"]
+    xq = np.asarray(fake_quant(jnp.asarray(x), fmt))
+    if af == "sigmoid":
+        ref = 1.0 / (1.0 + np.exp(-xq.astype(np.float64)))
+        got = np.asarray(cordic_sigmoid(jnp.asarray(xq), hr_stages, lv_stages))
+    elif af == "tanh":
+        ref = np.tanh(xq.astype(np.float64))
+        got = np.asarray(cordic_tanh(jnp.asarray(xq), hr_stages, lv_stages))
+    elif af == "softmax":
+        x2 = xq.reshape(-1, 8) if xq.size % 8 == 0 else xq[: xq.size // 8 * 8].reshape(-1, 8)
+        e = np.exp(x2.astype(np.float64))
+        ref = e / e.sum(-1, keepdims=True)
+        got = np.asarray(cordic_softmax(jnp.asarray(x2), hr_stages, lv_stages))
+    else:
+        raise ValueError(af)
+    got_q = np.asarray(fake_quant(jnp.asarray(got), fmt)).astype(np.float64)
+    err = got_q - ref
+    return ErrorPoint(af, bits, hr_stages, lv_stages,
+                      float(np.abs(err).mean()), float((err ** 2).mean()))
+
+
+def pareto_table(afs=("sigmoid", "tanh", "softmax"),
+                 bits_list=(4, 8, 16, 32),
+                 stage_grid=(2, 3, 4, 5, 6, 8, 10, 12)) -> list[ErrorPoint]:
+    out = []
+    for af in afs:
+        for bits in bits_list:
+            max_st = min(max(stage_grid), bits)
+            for st in (s for s in stage_grid if s <= max(bits, 4)):
+                hr = min(st, max_st)
+                out.append(af_error(af, bits, hr, st))
+    return out

@@ -1,0 +1,127 @@
+"""PrecisionPolicy — the framework-level contract for Flex-PE precision modes.
+
+The hardware's precision_sel / Sel_AF / ctrl_op registers become a per-layer
+policy object threaded through every model. A policy is static per compiled
+step (XLA needs static dtypes); "run-time switching" is realized as
+selection among compiled specializations — the idiomatic TPU equivalent of
+writing mode registers between workloads.
+
+`qmatmul` is the single matmul entry point used by all models: it applies
+fake-quant (with straight-through gradients) to both operands per the policy,
+so the same model function serves fp/bf16 baseline, FxP QAT training, and
+quantized inference. The serving path can swap in the real packed-int
+`kernels/fxp_gemm` implementation (same numerics contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .activation import flex_af
+from .fxp import FORMATS, fake_quant_ste
+
+__all__ = ["PrecisionPolicy", "qmatmul", "qeinsum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-layer-kind precision configuration (hardware mode registers).
+
+    matmul/af/kv_cache: FxP format names or None (= native bf16/fp32).
+    af_impl: 'cordic' (paper datapath) or 'exact'.
+    attn_softmax: 'cordic' routes attention softmax through the Flex-PE
+      softmax path; 'exact' uses jax.nn.softmax.
+    grad_compression: 'none' | 'fxp8' — quantized DP gradient all-reduce.
+    """
+    name: str = "bf16"
+    matmul: Optional[str] = None
+    af: Optional[str] = None
+    af_impl: str = "exact"
+    attn_softmax: str = "exact"
+    kv_cache: Optional[str] = None
+    grad_compression: str = "none"
+    # decode attention computed on integer KV codes (no bf16 cache copy);
+    # requires kv_cache set — the §Perf memory-bound hillclimb lever
+    int_attention: bool = False
+    # 'fxp8': compress the sequence-parallel activation all-gather at
+    # attention block inputs (half the dominant train collective bytes)
+    act_comm: str = "none"
+    # matmul partial-sum dtype crossing TP all-reduces: 'f32' (default) or
+    # 'bf16' (halves AR bytes; MXU accumulates fp32 internally either way)
+    matmul_out: str = "f32"
+    # constrain TP matmul OUTPUTS to the seq-sharded layout before the
+    # residual add, turning all-reduces into reduce-scatters (half bytes)
+    seq_outputs: bool = False
+
+    # -- factories ---------------------------------------------------------
+    @staticmethod
+    def bf16() -> "PrecisionPolicy":
+        """Native-precision baseline (no Flex-PE datapath)."""
+        return PrecisionPolicy(name="bf16")
+
+    @staticmethod
+    def flexpe(bits: int = 8, af_impl: str = "cordic",
+               grad_compression: str = "none") -> "PrecisionPolicy":
+        """Paper-faithful FxP<bits> mode: quantized matmuls + CORDIC AFs."""
+        fmt = f"fxp{bits}"
+        return PrecisionPolicy(
+            name=f"flexpe-{fmt}", matmul=fmt, af=fmt, af_impl=af_impl,
+            attn_softmax=af_impl if af_impl == "cordic" else "exact",
+            kv_cache=fmt if bits >= 8 else "fxp8",
+            grad_compression=grad_compression)
+
+    @staticmethod
+    def edge4() -> "PrecisionPolicy":
+        """FxP4 edge-inference mode (paper §III-B: first 4-bit config-AF)."""
+        return PrecisionPolicy(name="flexpe-fxp4", matmul="fxp4", af="fxp4",
+                               af_impl="cordic", attn_softmax="cordic",
+                               kv_cache="fxp8")
+
+    # -- ops ---------------------------------------------------------------
+    def act(self, x: jax.Array, af: str, axis: int = -1) -> jax.Array:
+        return flex_af(x, af, precision=self.af, impl=self.af_impl, axis=axis)
+
+    def softmax(self, x: jax.Array, axis: int = -1) -> jax.Array:
+        if self.attn_softmax != "cordic":
+            return flex_af(x, "softmax", precision=None, impl="exact", axis=axis)
+        from .activation import default_stages, softmax_lv_stages
+        hr, _ = default_stages(self.af)
+        lv = softmax_lv_stages(x.shape[axis], self.af)
+        return flex_af(x, "softmax", precision=self.af, impl="cordic",
+                       stages=(hr, lv), axis=axis)
+
+
+def _maybe_q(x: jax.Array, fmt_name: Optional[str]) -> jax.Array:
+    if fmt_name is None:
+        return x
+    return fake_quant_ste(x, fmt_name)
+
+
+def qmatmul(x: jax.Array, w: jax.Array, policy: Optional[PrecisionPolicy],
+            preferred=jnp.float32) -> jax.Array:
+    """Policy-aware matmul: fake-quant operands to the FxP grid (STE grads),
+    accumulate in fp32 (the hardware's FxP32 accumulator). With
+    policy.matmul_out='bf16' the dot OUTPUT (the tensor that crosses TP
+    all-reduces) is bf16 — the MXU's internal accumulation stays fp32."""
+    if policy is not None and policy.matmul is not None:
+        x = _maybe_q(x, policy.matmul)
+        w = _maybe_q(w, policy.matmul)
+    if policy is not None and policy.matmul_out == "bf16":
+        preferred = jnp.bfloat16
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=preferred).astype(x.dtype)
+
+
+def qeinsum(spec: str, x: jax.Array, w: jax.Array,
+            policy: Optional[PrecisionPolicy]) -> jax.Array:
+    if policy is not None and policy.matmul is not None:
+        x = _maybe_q(x, policy.matmul)
+        w = _maybe_q(w, policy.matmul)
+    pref = (jnp.bfloat16 if policy is not None
+            and policy.matmul_out == "bf16" else jnp.float32)
+    return jnp.einsum(spec, x, w,
+                      preferred_element_type=pref).astype(x.dtype)

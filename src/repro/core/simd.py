@@ -1,0 +1,64 @@
+"""SIMD lane packing — the storage side of the paper's 32-bit SIMD datapath.
+
+One int32 word carries 8×FxP4 / 4×FxP8 / 2×FxP16 / 1×FxP32 lanes
+(two's-complement nibbles/bytes/halves). On TPU, packed storage is what turns
+the paper's SIMD throughput claim into an HBM-bandwidth saving: a packed
+weight tensor moves 8×/4×/2× fewer bytes HBM→VMEM, and unpacking is cheap
+VPU work (shift+mask), exactly mirroring the hardware lane-split.
+
+Packing layout: lane j of word w holds element index w*L + j, little-endian
+in bit position (lane 0 = least-significant bits).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .fxp import FxPFormat
+
+__all__ = ["pack", "unpack", "packed_len"]
+
+
+def packed_len(n: int, fmt: FxPFormat) -> int:
+    lanes = 32 // fmt.bits
+    return (n + lanes - 1) // lanes
+
+
+def pack(codes: jax.Array, fmt: FxPFormat) -> jax.Array:
+    """Pack int32 codes (last axis) into int32 words, lanes on the last axis.
+
+    codes last-axis length must be a multiple of the lane count.
+    """
+    lanes = 32 // fmt.bits
+    if lanes == 1:
+        return codes.astype(jnp.int32)
+    *lead, n = codes.shape
+    assert n % lanes == 0, f"last axis {n} not a multiple of {lanes} lanes"
+    mask = (1 << fmt.bits) - 1
+    c = (codes.astype(jnp.int32) & mask).reshape(*lead, n // lanes, lanes)
+    shifts = (jnp.arange(lanes, dtype=jnp.int32) * fmt.bits)
+    # OR the shifted lanes together
+    words = jnp.bitwise_or.reduce if hasattr(jnp.bitwise_or, "reduce") else None
+    shifted = jnp.left_shift(c, shifts)
+    out = shifted[..., 0]
+    for j in range(1, lanes):
+        out = jnp.bitwise_or(out, shifted[..., j])
+    return out
+
+
+def unpack(words: jax.Array, fmt: FxPFormat, n: int | None = None) -> jax.Array:
+    """Unpack int32 words back to sign-extended int32 codes on the last axis."""
+    lanes = 32 // fmt.bits
+    if lanes == 1:
+        return words.astype(jnp.int32)
+    *lead, nw = words.shape
+    shifts = (jnp.arange(lanes, dtype=jnp.int32) * fmt.bits)
+    lanes_v = jnp.right_shift(words[..., None], shifts)  # logical on int32 is arithmetic; mask below
+    lanes_v = lanes_v & ((1 << fmt.bits) - 1)
+    # sign-extend: values >= 2^(bits-1) are negative
+    sign_bit = 1 << (fmt.bits - 1)
+    lanes_v = jnp.where(lanes_v >= sign_bit, lanes_v - (1 << fmt.bits), lanes_v)
+    out = lanes_v.reshape(*lead, nw * lanes).astype(jnp.int32)
+    if n is not None:
+        out = out[..., :n]
+    return out

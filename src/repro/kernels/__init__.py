@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the Flex-PE compute hot-spots:
+cordic_af (SIMD CORDIC activation functions), cordic_softmax (fused
+softmax via HR-exp + LV-divide), fxp_gemm (multi-precision integer GEMM
+with packed-int4 SIMD storage). Each package: <name>.py kernel +
+ops.py jit wrapper + ref.py pure-jnp oracle."""

@@ -1,0 +1,56 @@
+"""Jit'd public wrapper for the cordic_af Pallas kernel.
+
+Handles arbitrary input rank/shape (reshape + pad to block multiples),
+backend selection (interpret=True on CPU — kernel body executes in Python
+for validation; compiled Mosaic on real TPU), and optional FxP quantization
+of input/output per the Flex-PE datapath contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.cordic import PARETO_STAGES
+from ...core.fxp import FORMATS, fake_quant
+from .cordic_af import DEFAULT_BLOCK, cordic_af_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("af", "precision", "hr_stages",
+                                             "lv_stages", "interpret"))
+def cordic_af(x: jax.Array, af: str, precision: str | None = None,
+              hr_stages: int | None = None, lv_stages: int | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = _auto_interpret()
+    bits = FORMATS[precision].bits if precision else 16
+    hr_d, lv_d, _ = PARETO_STAGES[bits]
+    hr = hr_stages if hr_stages is not None else hr_d
+    lv = lv_stages if lv_stages is not None else lv_d
+
+    orig_shape, orig_dtype = x.shape, x.dtype
+    xf = x.astype(jnp.float32)
+    if precision is not None:
+        xf = fake_quant(xf, FORMATS[precision])
+
+    # flatten to 2D and pad to block multiples
+    n = orig_shape[-1] if len(orig_shape) >= 1 else 1
+    xf = xf.reshape(-1, n)
+    m = xf.shape[0]
+    bm = min(DEFAULT_BLOCK[0], max(8, m))
+    bn = min(DEFAULT_BLOCK[1], max(128, n))
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        xf = jnp.pad(xf, ((0, pm), (0, pn)))
+    out = cordic_af_pallas(xf, af, hr, lv, block=(bm, bn),
+                           interpret=interpret)
+    out = out[:m, :n].reshape(orig_shape)
+    if precision is not None:
+        out = fake_quant(out, FORMATS[precision])
+    return out.astype(orig_dtype)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the cordic_af kernel — the float-structural CORDIC
+from repro.core (same iteration schedule, no Pallas)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import cordic
+
+
+def cordic_af_ref(x: jax.Array, af: str, hr_stages: int = 4,
+                  lv_stages: int = 5, repeat_iters: bool = True) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if af == "relu":
+        return jnp.maximum(xf, 0.0)
+    if af == "exp":
+        return cordic.extended_exp_float(xf, hr_stages, repeat_iters=repeat_iters)
+    e = cordic.extended_exp_float(-jnp.abs(xf), hr_stages,
+                                  repeat_iters=repeat_iters)
+    if af in ("sigmoid", "silu"):
+        num = jnp.where(xf >= 0, jnp.ones_like(e), e)
+        sig = cordic.lv_divide_float(num, 1.0 + e, lv_stages)
+        return sig if af == "sigmoid" else xf * sig
+    if af == "tanh":
+        t = cordic.extended_exp_float(-2.0 * jnp.abs(xf), hr_stages,
+                                      repeat_iters=repeat_iters)
+        return jnp.sign(xf) * cordic.lv_divide_float(1.0 - t, 1.0 + t, lv_stages)
+    raise ValueError(af)
+
+
+def exact_af_ref(x: jax.Array, af: str) -> jax.Array:
+    """The true nonlinearity (numpy-level reference for error metrics)."""
+    xf = x.astype(jnp.float32)
+    return {
+        "relu": lambda v: jnp.maximum(v, 0.0),
+        "exp": jnp.exp,
+        "sigmoid": jax.nn.sigmoid,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+    }[af](xf)

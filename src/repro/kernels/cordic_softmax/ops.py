@@ -1,0 +1,49 @@
+"""Jit'd public wrapper for the cordic_softmax Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.activation import softmax_lv_stages
+from ...core.cordic import PARETO_STAGES
+from ...core.fxp import FORMATS, fake_quant
+from .cordic_softmax import cordic_softmax_pallas
+
+_NEG = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "hr_stages",
+                                             "lv_stages", "interpret"))
+def cordic_softmax(x: jax.Array, precision: str | None = None,
+                   hr_stages: int | None = None, lv_stages: int | None = None,
+                   interpret: bool | None = None) -> jax.Array:
+    """Softmax over the last axis via the Flex-PE CORDIC datapath."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bits = FORMATS[precision].bits if precision else 16
+    hr_d, _, _ = PARETO_STAGES[bits]
+    hr = hr_stages if hr_stages is not None else hr_d
+    # LV stages scale with row length (quotients ~1/N need log2(N)+6 bits)
+    lv = (lv_stages if lv_stages is not None
+          else softmax_lv_stages(x.shape[-1], precision))
+
+    orig_shape, orig_dtype = x.shape, x.dtype
+    xf = x.astype(jnp.float32)
+    if precision is not None:
+        xf = fake_quant(xf, FORMATS[precision])
+    n = orig_shape[-1]
+    xf = xf.reshape(-1, n)
+    m = xf.shape[0]
+    bm = 8 if m % 8 == 0 else 1
+    pn = (-n) % 128
+    pm = (-m) % bm
+    if pn or pm:
+        xf = jnp.pad(xf, ((0, pm), (0, pn)), constant_values=_NEG)
+    out = cordic_softmax_pallas(xf, hr, lv, block_rows=bm,
+                                interpret=interpret)
+    out = out[:m, :n].reshape(orig_shape)
+    if precision is not None:
+        out = fake_quant(out, FORMATS[precision])
+    return out.astype(orig_dtype)

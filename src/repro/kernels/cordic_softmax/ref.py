@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for cordic_softmax (and the exact softmax reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.activation import cordic_softmax as _core_cordic_softmax
+
+
+def cordic_softmax_ref(x: jax.Array, hr_stages: int = 4,
+                       lv_stages: int = 5) -> jax.Array:
+    return _core_cordic_softmax(x.astype(jnp.float32), hr_stages, lv_stages,
+                                axis=-1)
+
+
+def exact_softmax_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1)

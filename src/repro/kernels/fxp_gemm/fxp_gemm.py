@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: multi-precision fixed-point GEMM (the Flex-PE MAC array).
+
+The systolic-array side of the paper: quantized GEMM over int8 codes with
+int32 accumulation (the hardware's FxP32 accumulator), MXU-aligned
+128x128x128 default blocks, and an optional packed-int4 operand path where
+two FxP4 codes share one int8 byte — the SIMD storage win: int4 weights move
+half the HBM->VMEM bytes and unpack with shift/mask inside the kernel,
+mirroring the PE's lane-split barrel shifter.
+
+Grid is (M/bm, N/bn, K/bk) with K innermost; the int32 output block is
+zeroed at k==0 and accumulated across K steps (output-stationary, exact
+integer arithmetic — bit-identical to the ref oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCKS = (128, 128, 128)
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.int32),
+                          w_ref[...].astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+
+
+def _gemm_kernel_packed4(x_ref, wp_ref, o_ref):
+    """w block arrives as packed int8 bytes: low nibble = even col-pair
+    element, high nibble = odd (lane order of core.simd.pack)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wp = wp_ref[...].astype(jnp.int32)         # [bk, bn//2]
+    lo = wp & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)        # sign-extend nibble
+    hi = (wp >> 4) & 0xF
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    bk, bn2 = wp.shape
+    w = jnp.stack([lo, hi], axis=-1).reshape(bk, bn2 * 2)
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.int32), w,
+                          preferred_element_type=jnp.int32)
+
+
+def fxp_gemm_pallas(x_codes: jax.Array, w_codes: jax.Array,
+                    blocks=DEFAULT_BLOCKS, interpret: bool = False):
+    """int8[M,K] @ int8[K,N] -> int32[M,N], exact."""
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2
+    bm, bn, bk = (min(b, d) for b, d in zip(blocks, (m, n, k)))
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x_codes.astype(jnp.int8), w_codes.astype(jnp.int8))
+
+
+def fxp4_gemm_packed_pallas(x_codes: jax.Array, w_packed: jax.Array,
+                            blocks=DEFAULT_BLOCKS, interpret: bool = False):
+    """int8[M,K] (FxP4 codes) @ packed-nibble int8[K, N//2] -> int32[M,N]."""
+    m, k = x_codes.shape
+    k2, n2 = w_packed.shape
+    assert k == k2
+    n = n2 * 2
+    bm, bn, bk = (min(b, d) for b, d in zip(blocks, (m, n, k)))
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0 and bn % 2 == 0
+    return pl.pallas_call(
+        _gemm_kernel_packed4,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x_codes.astype(jnp.int8), w_packed.astype(jnp.int8))

@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the fxp_gemm Pallas kernels.
+
+`fxp_gemm(x, w, precision=...)` is the serving-path quantized matmul:
+dynamic-scale quantize -> integer Pallas GEMM -> dequant (+ optional fused
+Flex-PE AF). FxP4 additionally offers `packed=True`, storing w as packed
+nibbles (half the weight bytes moved — the SIMD storage win).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.activation import flex_af
+from ...core.fxp import FORMATS, dequantize, quantize
+from .fxp_gemm import fxp4_gemm_packed_pallas, fxp_gemm_pallas
+
+
+def _pad_to(x, mult, axis, value=0):
+    p = (-x.shape[axis]) % mult
+    if p == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, p)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "af", "packed",
+                                             "interpret"))
+def fxp_gemm(x: jax.Array, w: jax.Array, precision: str = "fxp8",
+             af: str | None = None, packed: bool = False,
+             interpret: bool | None = None) -> jax.Array:
+    """Quantized x @ w with FxP<precision> codes and int32 accumulation.
+
+    x: f[M,K], w: f[K,N]. Returns f32[M,N] (optionally through flex_af).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fmt = FORMATS[precision]
+    assert fmt.bits <= 8 or not packed, "packed path is FxP4-only"
+    m, k = x.shape
+    _, n = w.shape
+
+    xc, sx = quantize(x, fmt)
+    wc, sw = quantize(w, fmt)
+    # pad to MXU-aligned blocks (zeros contribute nothing to the dot)
+    xc8 = _pad_to(_pad_to(xc.astype(jnp.int8), 128, 0), 128, 1)
+    wc8 = _pad_to(_pad_to(wc.astype(jnp.int8), 128, 0), 128, 1)
+
+    if packed and fmt.bits == 4:
+        lo = wc8[:, 0::2] & 0xF
+        hi = wc8[:, 1::2] & 0xF
+        wp = (lo | (hi << 4)).astype(jnp.int8)
+        acc = fxp4_gemm_packed_pallas(xc8, wp, interpret=interpret)
+    else:
+        acc = fxp_gemm_pallas(xc8, wc8, interpret=interpret)
+    out = dequantize(acc[:m, :n], sx * sw)
+    if af is not None:
+        out = flex_af(out, af, precision=precision, impl="cordic")
+    return out

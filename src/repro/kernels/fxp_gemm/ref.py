@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for fxp_gemm — exact int32 GEMM + the float-level
+quantized-matmul reference used by model tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.fxp import FORMATS, dequantize, quantize
+
+
+def fxp_gemm_codes_ref(x_codes: jax.Array, w_codes: jax.Array) -> jax.Array:
+    """Exact integer GEMM oracle (int32 accumulate)."""
+    return jnp.dot(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def fxp_gemm_ref(x: jax.Array, w: jax.Array, precision: str = "fxp8"):
+    """Float-level reference: dynamic-scale quantize both operands, exact
+    integer GEMM, dequantize. Returns (out_f32, x_codes, w_codes, sx, sw)."""
+    fmt = FORMATS[precision]
+    xc, sx = quantize(x, fmt)
+    wc, sw = quantize(w, fmt)
+    acc = fxp_gemm_codes_ref(xc, wc)
+    return dequantize(acc, sx * sw), xc, wc, sx, sw

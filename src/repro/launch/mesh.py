@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Mesh is built by a FUNCTION (never at import) so importing this module
+never touches jax device state. Single-pod: (data=16, model=16) = 256 chips
+(one TPU v5e pod-slice); multi-pod: (pod=2, data=16, model=16) = 512 chips.
+The `pod` axis carries only data parallelism (gradient all-reduce crosses
+the inter-pod DCI once per step); `model` stays inside a pod where ICI
+bandwidth lives — the standard >=2-pod layout.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                         devices=devices[:n])
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    mp = math.gcd(model_parallel, n)
+    return jax.make_mesh((n // mp, mp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

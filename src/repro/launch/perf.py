@@ -1,0 +1,100 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb harness: run named optimization variants of a dry-run
+cell and record the roofline-term deltas.
+
+    python -m repro.launch.perf --cell mistral_decode --variant baseline
+    python -m repro.launch.perf --cell mistral_decode --variant int8_attn
+
+Each variant re-lowers the cell with one change and writes
+results/perf/<cell>.<variant>.json with calibrated flops/bytes/collective
+terms (same accounting as repro.launch.dryrun).
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from ..core.precision import PrecisionPolicy
+from . import dryrun as DR
+
+CELLS = {
+    # (arch, shape): chosen per §Perf — most collective-bound, most
+    # memory-bound/representative-serving, and representative-training
+    "dscoder_train": ("deepseek_coder_33b", "train_4k"),
+    "mistral_decode": ("mistral_nemo_12b", "decode_32k"),
+    "mistral_train": ("mistral_nemo_12b", "train_4k"),
+}
+
+# variant -> dict of dryrun_cell overrides applied via monkeypatch-args
+VARIANTS = {
+    "baseline": {},
+    # training variants
+    "zero1": {"fsdp": "zero1"},
+    "remat_dots": {"remat_policy": "dots"},
+    "zero1_remat_dots": {"fsdp": "zero1", "remat_policy": "dots"},
+    "exact_af": {"policy_name": "bf16"},
+    "micro4": {"micro_batches": 4},
+    "zero1_micro4": {"fsdp": "zero1", "micro_batches": 4},
+    "act_comm_fxp8": {"act_comm": "fxp8"},
+    "zero1_act_comm": {"fsdp": "zero1", "act_comm": "fxp8"},
+    "ar_bf16": {"matmul_out": "bf16"},
+    "ar_bf16_remat_dots": {"matmul_out": "bf16", "remat_policy": "dots"},
+    "rs_out": {"seq_outputs": True},
+    "rs_out_ar_bf16": {"seq_outputs": True, "matmul_out": "bf16"},
+    # serving variants
+    "int8_attn": {"int_attention": True},
+    "kv_bf16": {"kv_bf16": True},
+}
+
+
+def run_variant(cell: str, variant: str, multi_pod=False):
+    arch, shape = CELLS[cell]
+    ov = VARIANTS[variant]
+    policy = DR._policy(ov.get("policy_name", "flexpe-fxp8"))
+    if ov.get("int_attention"):
+        policy = dataclasses.replace(policy, int_attention=True)
+    if ov.get("kv_bf16"):
+        policy = dataclasses.replace(policy, kv_cache=None)
+    if ov.get("act_comm"):
+        policy = dataclasses.replace(policy, act_comm=ov["act_comm"])
+    if ov.get("matmul_out"):
+        policy = dataclasses.replace(policy, matmul_out=ov["matmul_out"])
+    if ov.get("seq_outputs"):
+        policy = dataclasses.replace(policy, seq_outputs=True)
+
+    rec = DR.dryrun_cell(
+        arch, shape, multi_pod=multi_pod, policy=policy,
+        fsdp=ov.get("fsdp"),
+        micro_batches=ov.get("micro_batches"),
+        remat_policy=ov.get("remat_policy", "full"))
+    rec["variant"] = variant
+    rec["cell"] = cell
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), required=True)
+    ap.add_argument("--variant", choices=list(VARIANTS), required=True)
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    rec = run_variant(args.cell, args.variant)
+    path = os.path.join(args.out, f"{args.cell}.{args.variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        from .roofline import analyse_record
+        a = analyse_record(rec)
+        print(json.dumps({k: a[k] for k in
+                          ("compute_s", "memory_s", "collective_s",
+                           "bottleneck", "mfu_bound", "hbm_gb")}))
+    else:
+        print(json.dumps(rec)[:500])
+
+
+if __name__ == "__main__":
+    main()

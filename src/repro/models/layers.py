@@ -1,0 +1,351 @@
+"""Shared model layers — all policy-aware (Flex-PE precision + CORDIC AFs).
+
+Functional style: params are nested dicts of arrays; a parallel tree of
+logical-axis tuples (same structure) drives sharding (distributed/sharding).
+
+Attention is chunked (query-block scan with online softmax) so that the
+[B,H,S,S] score matrix is never materialised — required for train_4k /
+prefill_32k at production batch sizes. The online softmax has a pluggable
+exp/normalise pair: exact, or the Flex-PE CORDIC datapath (HR exp +
+final LV division), which is how the paper's softmax integrates with a
+memory-efficient attention schedule on TPU.
+
+KV caches support FxP8 quantized storage (policy.kv_cache) — int8 codes +
+per-(batch,head) scales, halving cache HBM and its decode roofline term.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cordic
+from ..core.activation import default_stages, softmax_lv_stages
+from ..core.fxp import FORMATS, dequantize, quantize
+from ..core.precision import PrecisionPolicy, qmatmul
+
+# ---------------------------------------------------------------------------
+# initialisation helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, dtype=jnp.bfloat16, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * w + b
+
+
+def apply_norm(x, p, kind):
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+def norm_init(d, kind, dtype=jnp.bfloat16):
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def norm_axes(kind):
+    if kind == "layernorm":
+        return {"w": ("embed",), "b": ("embed",)}
+    return {"w": ("embed",)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta=10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [B, S, H, hd]; positions: [B, S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# online-softmax chunked attention (train/prefill path)
+# ---------------------------------------------------------------------------
+
+def _exp_fn(policy: Optional[PrecisionPolicy]):
+    """exp for the online softmax: exact, or Flex-PE HR-CORDIC."""
+    if policy is not None and policy.attn_softmax == "cordic":
+        hr, _ = default_stages(policy.af)
+        return lambda z: cordic.extended_exp_float(z, hr)
+    return jnp.exp
+
+
+def _final_div(num, den, kv_len, policy: Optional[PrecisionPolicy]):
+    if policy is not None and policy.attn_softmax == "cordic":
+        lv = softmax_lv_stages(kv_len, policy.af)
+        # LV convergence needs |num| <= |den|; num rows are sums of
+        # exp-weighted V, rescale by row max |V| bound via den>=max exp sum.
+        scale = jnp.maximum(jnp.max(jnp.abs(num), axis=-1, keepdims=True),
+                            den) + 1e-9
+        # lv_divide(num/s, den/s) == num/den with both args scaled into [-1,1]
+        return cordic.lv_divide_float(num / scale, den / scale, lv)
+    return num / den
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      policy: Optional[PrecisionPolicy] = None,
+                      chunk: int = 512, kv_valid_len=None):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] -> [B,Sq,H,hd].
+
+    Query-block scan with online softmax; scores never exceed
+    [B, chunk, H, Skv] live. GQA via head-group reshape. `q_offset` is the
+    absolute position of q[0] (prefill continuation / decode). When
+    `kv_valid_len` is set, keys at positions >= kv_valid_len are masked
+    (decode with a pre-allocated cache).
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    expf = _exp_fn(policy)
+
+    nq = max(1, sq // chunk)
+    while sq % nq:
+        nq -= 1
+    qc = sq // nq
+    qb = q.reshape(b, nq, qc, h, hd).transpose(1, 0, 2, 3, 4)  # [nq,B,qc,H,hd]
+    kg = k  # [B,Skv,KV,hd]
+    kv_pos = jnp.arange(skv)
+
+    def one_block(carry, qblk_idx):
+        qblk, idx = qblk_idx
+        # scores: [B, qc, H, Skv]
+        qh = qblk.reshape(b, qc, kvh, g, hd)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qh.astype(jnp.float32),
+                       kg.astype(jnp.float32)) * scale
+        s = s.reshape(b, qc, h, skv)
+        if causal:
+            qpos = q_offset + idx * qc + jnp.arange(qc)
+            mask = kv_pos[None, :] <= qpos[:, None]
+            s = jnp.where(mask[None, :, None, :], s, -1e30)
+        if kv_valid_len is not None:
+            vmask = kv_pos < kv_valid_len
+            s = jnp.where(vmask[None, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = expf(s - m)                                  # [B,qc,H,Skv]
+        denom = jnp.sum(p, axis=-1)                      # [B,qc,H]
+        ph = p.reshape(b, qc, kvh, g, skv)
+        o = jnp.einsum("bqkgs,bskd->bqkgd", ph, v.astype(jnp.float32))
+        o = o.reshape(b, qc, h, hd)
+        o = _final_div(o, denom[..., None], skv, policy)
+        return carry, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_block, 0, (qb, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def int8_decode_attention(q, k_codes, v_codes, k_scale, v_scale, fmt,
+                          policy, kv_valid_len):
+    """Decode attention computed on integer KV codes (Flex-PE FxP MAC):
+
+      scores = (q_codes @ k_codes^T) * (sq * k_scale)   int8 x int8 -> int32
+      out    = (p_codes @ v_codes)   * (sp * v_scale)   int8 x int8 -> int32
+
+    q: [B,1,H,hd] float; k/v codes: [B,S,KV,hd] int8 with per-(pos,head)
+    scales [B,S,KV,1]. No bf16 cache copy is materialised: HBM traffic for
+    the cache is its int8 codes (the SIMD storage win during decode).
+    """
+    b, sq_, h, hd = q.shape
+    _, skv, kvh, _ = k_codes.shape
+    g = h // kvh
+    qc, sq = quantize(q.astype(jnp.float32) / math.sqrt(hd), fmt, axis=3)
+    qh = qc.reshape(b, sq_, kvh, g, hd)
+    # int32 scores, dequantized with folded (q, per-position-k) scales
+    s_int = jnp.einsum("bqkgd,bskd->bqkgs", qh.astype(jnp.int32),
+                       k_codes.astype(jnp.int32))
+    ks = k_scale.transpose(0, 3, 2, 1).reshape(b, 1, kvh, 1, skv)
+    s = s_int.astype(jnp.float32) * sq.reshape(b, sq_, kvh, g, 1) * ks
+    mask = jnp.arange(skv) < kv_valid_len
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    p = policy.softmax(s, axis=-1) if policy else jax.nn.softmax(s, axis=-1)
+    # fold per-position v scales into the softmax weights, requantize the
+    # weighted probs to int8 (the paper's FxP attention weights), int-dot
+    # against v codes: out = sum_s (p_s * vscale_s) * v_codes_s
+    vs = v_scale.transpose(0, 3, 2, 1).reshape(b, 1, kvh, 1, skv)
+    pv = p.astype(jnp.float32) * vs
+    pvc, spv = quantize(pv, fmt, axis=4)
+    o_int = jnp.einsum("bqkgs,bskd->bqkgd", pvc.astype(jnp.int32),
+                       v_codes.astype(jnp.int32))
+    out = o_int.astype(jnp.float32) * spv.reshape(b, sq_, kvh, g, 1)
+    return out.reshape(b, sq_, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype=jnp.bfloat16):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kvh * hd, dtype),
+        "wv": dense_init(ks[2], d, kvh * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def attn_axes(cfg):
+    ax = {"wq": ("embed", "qkv"), "wk": ("embed", "kv_qkv"),
+          "wv": ("embed", "kv_qkv"), "wo": ("qkv", "embed")}
+    if cfg.qkv_bias:
+        ax.update({"bq": ("qkv",), "bk": ("kv_qkv",), "bv": ("kv_qkv",)})
+    return ax
+
+
+def attention(p, x, cfg, *, positions, policy=None, cache=None,
+              layer_idx=None, cache_len=None):
+    """Returns (out, new_cache_entry|None).
+
+    Training/prefill: cache=None -> full chunked attention over x.
+    Decode: cache=(k,v[,scales]) pre-allocated [B,Smax,KV,hd]; x is the new
+    token block; cache_len = number of valid positions already stored.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = qmatmul(x, p["wq"], policy)
+    k = qmatmul(x, p["wk"], policy)
+    v = qmatmul(x, p["wv"], policy)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=True, policy=policy)
+        new_cache = None
+    else:
+        kc, vc, k_scale, v_scale = cache
+        kq_fmt = FORMATS[policy.kv_cache] if (policy and policy.kv_cache) else None
+        # write new k/v at position cache_len
+        if kq_fmt is not None:
+            # per-(position, head) scales: old codes keep their own scale
+            k_codes, ks_new = quantize(k, kq_fmt, axis=3)
+            v_codes, vs_new = quantize(v, kq_fmt, axis=3)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k_codes.astype(kc.dtype), cache_len, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v_codes.astype(vc.dtype), cache_len, axis=1)
+            k_scale = jax.lax.dynamic_update_slice_in_dim(
+                k_scale, ks_new, cache_len, axis=1)
+            v_scale = jax.lax.dynamic_update_slice_in_dim(
+                v_scale, vs_new, cache_len, axis=1)
+            if getattr(policy, "int_attention", False):
+                # fully-integer FxP attention (§Perf): score/AV dots run on
+                # int8 codes directly — no bf16 dequantized cache copy is
+                # ever materialised; scales fold into q and the softmax
+                # weights (the Flex-PE SIMD MAC applied to attention).
+                out = int8_decode_attention(
+                    q, kc, vc, k_scale, v_scale, kq_fmt, policy,
+                    kv_valid_len=cache_len + s)
+                new_cache = (kc, vc, k_scale, v_scale)
+                out = out.reshape(b, s, h * hd)
+                return qmatmul(out, p["wo"], policy), new_cache
+            k_full = dequantize(kc, k_scale, jnp.bfloat16)
+            v_full = dequantize(vc, v_scale, jnp.bfloat16)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                     cache_len, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                     cache_len, axis=1)
+            k_full, v_full = kc, vc
+        out = chunked_attention(q, k_full, v_full, causal=False,
+                                q_offset=cache_len, policy=policy,
+                                kv_valid_len=cache_len + s)
+        new_cache = (kc, vc, k_scale, v_scale)
+
+    out = out.reshape(b, s, h * hd)
+    return qmatmul(out, p["wo"], policy), new_cache
+
+
+def init_kv_cache(cfg, batch, max_len, policy=None, n_layers=None,
+                  dtype=jnp.bfloat16):
+    """Pre-allocated per-layer KV cache, stacked on a leading layer axis."""
+    n_layers = n_layers if n_layers is not None else cfg.n_layers
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    quant = policy is not None and policy.kv_cache is not None
+    dt = jnp.int8 if quant else dtype
+    kc = jnp.zeros((n_layers, batch, max_len, kvh, hd), dt)
+    vc = jnp.zeros((n_layers, batch, max_len, kvh, hd), dt)
+    slen = max_len if quant else 1
+    ks = jnp.full((n_layers, batch, slen, kvh, 1), 1e-6, jnp.float32)
+    vs = jnp.full((n_layers, batch, slen, kvh, 1), 1e-6, jnp.float32)
+    return {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN, GLU family)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d, ff, act, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d, ff, dtype),
+         "w2": dense_init(ks[1], ff, d, dtype)}
+    if act in ("silu", "swiglu"):  # gated
+        p["w3"] = dense_init(ks[2], d, ff, dtype)
+    return p
+
+
+def mlp_axes(act):
+    ax = {"w1": ("embed", "ff"), "w2": ("ff", "embed")}
+    if act in ("silu", "swiglu"):
+        ax["w3"] = ("embed", "ff")
+    return ax
+
+
+def mlp(p, x, act, policy=None):
+    h = qmatmul(x, p["w1"], policy)
+    if "w3" in p:  # SwiGLU
+        gate = policy.act(h, "silu") if policy else jax.nn.silu(h)
+        h = gate * qmatmul(x, p["w3"], policy)
+    else:
+        if policy:
+            h = policy.act(h, act if act in ("gelu", "relu", "tanh",
+                                             "sigmoid") else "gelu")
+        else:
+            h = {"gelu": jax.nn.gelu, "relu": jax.nn.relu,
+                 "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid}[act](h)
+    return qmatmul(h, p["w2"], policy)

@@ -1,0 +1,192 @@
+"""Mamba2 (SSD — state-space duality) layer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic term
+(attention-like, masked by the decay kernel L) + inter-chunk recurrence on
+the [H, P, N] states — O(S·Q) work with chunk Q, sub-quadratic in S.
+Decode is the O(1)-per-token recurrence on the carried state.
+
+Flex-PE integration (§DESIGN Arch-applicability): the in/out projections run
+through the policy's quantized-matmul path and the SiLU gate through the
+CORDIC sigmoid datapath; the state recurrence itself stays fp32 (the paper's
+own guidance — higher precision for error-accumulating dependencies).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import PrecisionPolicy, qmatmul
+from .layers import dense_init
+
+
+def ssm_init(key, cfg, dtype=jnp.bfloat16):
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    cw = cfg.conv_width
+    # in_proj -> [z (di), x (di), B (g*n), C (g*n), dt (h)]
+    d_in_proj = 2 * di + 2 * g * n + h
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * g * n
+    return {
+        "in_proj": dense_init(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, conv_ch), jnp.float32)
+                   / math.sqrt(cw)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), math.log(math.e - 1), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def ssm_axes(cfg):
+    return {"in_proj": ("embed", "ssm_inner"), "conv_w": (None, "ssm_inner"),
+            "conv_b": ("ssm_inner",), "A_log": ("ssm_heads",),
+            "D": ("ssm_heads",), "dt_bias": ("ssm_heads",),
+            "norm_w": ("ssm_inner",), "out_proj": ("ssm_inner", "embed")}
+
+
+def _split_proj(zxbcdt, cfg):
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_norm(y, z, w, policy, eps=1e-5):
+    if policy is not None and policy.af is not None:
+        gate = policy.act(z, "silu")
+    else:
+        gate = jax.nn.silu(z)
+    y = y * gate
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)).astype(y.dtype) * w
+
+
+def _segsum(x):
+    """log-space cumulative decays within a chunk: out[..., i, j] =
+    sum_{j < k <= i} x[..., k] (−inf above diagonal)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    idx = jnp.arange(q)
+    mask = idx[:, None] >= idx[None, :]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, B, C, cfg, init_state=None, chunk=128):
+    """SSD forward. xh:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,g,n].
+    Returns (y [b,s,h,p], final_state [b,h,p,n])."""
+    b, s, h, p = xh.shape
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    rep = h // g
+
+    xc = xh.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+    dA = -dtc * A                                      # log-decay (negative)
+    dA_cs = jnp.cumsum(dA, axis=2)                     # [b,nc,q,h]
+
+    # 1) intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))     # [b,nc,h,q,q]
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)      # [b,nc,g,q,q]
+    CB = jnp.repeat(CB, rep, axis=2)                   # [b,nc,h,q,q]
+    M = CB * L
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtc, xc)
+
+    # 2) chunk states: decay-weighted outer products
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # [b,nc,q,h]
+    BX = jnp.einsum("bcqgn,bcqh,bcqhp->bchpn",
+                    Bc, dtc * decay_states, xc)            # [b,nc,h,p,n]
+
+    # 3) inter-chunk recurrence over nc (associative scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        bx, dec = inp                                      # [b,h,p,n],[b,h]
+        new = carry * dec[..., None, None] + bx
+        return new, carry                                  # emit PREVIOUS
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0, (BX.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+                      chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [b,nc,h,p,n]
+
+    # 4) state -> output contribution
+    state_decay = jnp.exp(dA_cs)                           # [b,nc,q,h]
+    Cr = jnp.repeat(Cc, rep, axis=3) if h != g else Cc     # [b,nc,q,h,n]
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cr, prev_states.astype(xh.dtype), state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_layer(p, x, cfg, policy: Optional[PrecisionPolicy] = None,
+                 state=None, conv_state=None, chunk=128):
+    """x: [B,S,D]. Train/prefill when state is None; one-step decode when
+    state=(ssm_state [B,H,P,N], conv_state [B,cw-1,conv_ch])."""
+    b, s, d = x.shape
+    di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    pdim = cfg.ssm_headdim
+    cw = cfg.conv_width
+
+    zxbcdt = qmatmul(x, p["in_proj"], policy)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+
+    decode = state is not None
+    if not decode:
+        # causal depthwise conv1d over [B,S,conv_ch]
+        pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + s] * p["conv_w"][i] for i in range(cw))
+        xbc_c = jax.nn.silu(conv + p["conv_b"])
+        new_conv_state = pad[:, -(cw - 1):] if cw > 1 else None
+    else:
+        cat = jnp.concatenate([conv_state, xbc], axis=1)   # [B,cw,ch]
+        conv = jnp.einsum("bwc,wc->bc", cat, p["conv_w"])[:, None]
+        xbc_c = jax.nn.silu(conv + p["conv_b"])
+        new_conv_state = cat[:, 1:]
+
+    xh, BC = jnp.split(xbc_c, [di], axis=-1)
+    Bm, Cm = jnp.split(BC, 2, axis=-1)
+    xh = xh.reshape(b, s, h, pdim)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+
+    if not decode:
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg, chunk=chunk)
+    else:
+        # recurrence: h' = h * exp(-dt*A) + dt * x ⊗ B ; y = C·h'
+        dt1 = dt[:, 0]                                     # [B,H]
+        dec = jnp.exp(-dt1 * A)                            # [B,H]
+        Bx = jnp.einsum("bhp,bgn->bhpn", (dt1[..., None] * xh[:, 0]),
+                        Bm[:, 0].astype(jnp.float32))
+        final = state * dec[..., None, None] + Bx
+        y = jnp.einsum("bgn,bhpn->bhp", Cm[:, 0].astype(jnp.float32),
+                       final)[:, None].reshape(b, 1, h, pdim)
+
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_w"], policy)
+    out = qmatmul(y, p["out_proj"], policy)
+    return out, (final, new_conv_state)
+
+
+def init_ssm_state(cfg, batch):
+    h, pdim, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return (jnp.zeros((batch, h, pdim, n), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width - 1, conv_ch), jnp.bfloat16))

@@ -1,0 +1,121 @@
+"""CORDIC engine tests: float-structural vs numpy, bit-accurate vs
+float-structural, convergence domains, Pareto monotonicity."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cordic
+from repro.core.fxp import FORMATS
+
+
+def test_hr_mode_matches_numpy():
+    z = jnp.linspace(-1.0, 1.0, 41)
+    c, s = cordic.hr_coshsinh_float(z, 12, repeat_iters=True)
+    np.testing.assert_allclose(np.asarray(c), np.cosh(np.asarray(z)),
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s), np.sinh(np.asarray(z)),
+                               atol=2e-3)
+
+
+def test_extended_exp_accuracy():
+    z = jnp.linspace(-20, 20, 81)
+    got = cordic.extended_exp_float(z, 8)
+    rel = np.abs(np.asarray(got) - np.exp(np.asarray(z))) / np.exp(
+        np.asarray(z))
+    assert rel.max() < 0.01
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_lv_divide_property(seed):
+    rng = np.random.default_rng(seed)
+    den = rng.uniform(0.2, 2.0, 16).astype(np.float32)
+    num = den * rng.uniform(-0.99, 0.99, 16).astype(np.float32)
+    q = cordic.lv_divide_float(jnp.asarray(num), jnp.asarray(den), 14)
+    np.testing.assert_allclose(np.asarray(q), num / den, atol=2 ** -13)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_lr_mac_property(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1, 1, 16).astype(np.float32)
+    b = rng.uniform(-cordic.LR_MAX, cordic.LR_MAX, 16).astype(np.float32)
+    acc = rng.uniform(-1, 1, 16).astype(np.float32)
+    got = cordic.lr_mac_float(jnp.asarray(a), jnp.asarray(b),
+                              jnp.asarray(acc), 16)
+    # error bounded by |a| * 2^-(stages+i_start-1)
+    np.testing.assert_allclose(np.asarray(got), acc + a * b,
+                               atol=np.abs(a).max() * 2 ** -12 + 1e-6)
+
+
+def test_bit_accurate_matches_float():
+    fmt = FORMATS["fxp16"]
+    z = jnp.array([0.9, -0.7, 0.3, 0.0])
+    zc = (z * (1 << fmt.frac)).astype(jnp.int32)
+    xc, yc = cordic.hr_coshsinh_fxp(zc, fmt, 6)
+    cf, sf = cordic.hr_coshsinh_float(z, 6)
+    np.testing.assert_allclose(np.asarray(xc) / (1 << fmt.frac),
+                               np.asarray(cf), atol=4 * fmt.eps)
+    np.testing.assert_allclose(np.asarray(yc) / (1 << fmt.frac),
+                               np.asarray(sf), atol=4 * fmt.eps)
+
+
+def test_bit_accurate_lv_divide():
+    fmt = FORMATS["fxp16"]
+    num, den = 0.3, 0.8
+    q = cordic.lv_divide_fxp(
+        jnp.array([int(num * (1 << fmt.frac))]),
+        jnp.array([int(den * (1 << fmt.frac))]), fmt, 10)
+    assert abs(float(q[0]) / (1 << fmt.frac) - num / den) < 2 ** -9
+
+
+def test_bit_accurate_lr_mac():
+    fmt = FORMATS["fxp16"]
+    a, b, acc = 0.5, 3.25, 0.125
+    got = cordic.lr_mac_fxp(
+        jnp.array([int(a * (1 << fmt.frac))]),
+        jnp.array([int(b * (1 << fmt.frac))]),
+        jnp.array([int(acc * (1 << fmt.frac))]), fmt, 10)
+    assert abs(float(got[0]) / (1 << fmt.frac) - (acc + a * b)) < 2 ** -6
+
+
+def test_pareto_more_stages_less_error():
+    """Paper §II-E: error decreases (weakly) with stage count."""
+    from repro.core.pareto import af_error
+    errs = [af_error("sigmoid", 16, min(s, 12), s).mae for s in (2, 5, 10)]
+    assert errs[0] > errs[-1]
+
+
+def test_paper_pareto_point_within_tolerance():
+    """FxP8 @ (4 HR, 5 LV) must sit in the paper's <2% regime (Fig. 5/6)."""
+    from repro.core.pareto import af_error
+    p = af_error("sigmoid", 8, 4, 5)
+    assert p.mae < 0.02, p
+    p = af_error("tanh", 8, 4, 5)
+    assert p.mae < 0.03, p
+
+
+def test_gain_values():
+    # paper: Kh = 0.8281 (the classic constant, which includes the
+    # {4,13,...} convergence repeats; 1/Kh = 1.2074 as in their Table II)
+    assert abs(cordic.hyperbolic_gain(30, repeat_iters=True) - 0.8281) < 2e-4
+
+
+def test_iterative_mode_matches_pipelined():
+    """Paper §III: iterative (fori_loop FSM) and pipelined (unrolled) modes
+    are the same datapath time-multiplexed — results must be identical."""
+    z = jnp.linspace(-1.0, 1.0, 17)
+    cp, sp = cordic.hr_coshsinh_float(z, 6)
+    ci, si = cordic.hr_coshsinh_iterative(z, 6)
+    np.testing.assert_allclose(np.asarray(cp), np.asarray(ci), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(si), rtol=1e-6)
+    num = jnp.array([0.3, -0.5, 0.7])
+    den = jnp.array([0.9, 1.0, 0.8])
+    qp = cordic.lv_divide_float(num, den, 10)
+    qi = cordic.lv_divide_iterative(num, den, 10)
+    np.testing.assert_allclose(np.asarray(qp), np.asarray(qi), rtol=1e-6)

@@ -1,0 +1,72 @@
+"""Unit + property tests for the FxP quantization substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fxp, simd
+
+FORMATS = list(fxp.FORMATS.values())
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+def test_quantize_roundtrip_bound(fmt):
+    x = jnp.linspace(-3.0, 3.0, 257)
+    codes, scale = fxp.quantize(x, fmt)
+    back = fxp.dequantize(codes, scale)
+    # in-range values round to within half a step
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.5 + 1e-7
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+def test_fake_quant_idempotent(fmt):
+    x = jnp.linspace(-2.0, 2.0, 129)
+    q1 = fxp.fake_quant(x, fmt)
+    q2 = fxp.fake_quant(q1, fmt)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+def test_code_dtypes():
+    assert fxp.quantize(jnp.ones(4), fxp.FXP4)[0].dtype == jnp.int8
+    assert fxp.quantize(jnp.ones(4), fxp.FXP8)[0].dtype == jnp.int8
+    assert fxp.quantize(jnp.ones(4), fxp.FXP16)[0].dtype == jnp.int16
+    assert fxp.quantize(jnp.ones(4), fxp.FXP32)[0].dtype == jnp.int32
+
+
+def test_ste_gradient_passes_through():
+    f = lambda x: jnp.sum(fxp.fake_quant_ste(x, "fxp8") ** 2)
+    x = jnp.array([0.5, -0.25, 0.9])
+    g = jax.grad(f)(x)
+    # STE: d/dx sum(q(x)^2) ~ 2*q(x)
+    np.testing.assert_allclose(np.asarray(g),
+                               2 * np.asarray(fxp.fake_quant_ste(x, "fxp8")),
+                               atol=0.05)
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from(["fxp4", "fxp8", "fxp16"]))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(seed, fmt_name):
+    fmt = fxp.FORMATS[fmt_name]
+    rng = np.random.default_rng(seed)
+    lanes = 32 // fmt.bits
+    n = lanes * rng.integers(1, 9)
+    codes = rng.integers(fmt.qmin, fmt.qmax + 1, size=(3, n)).astype(np.int32)
+    words = simd.pack(jnp.asarray(codes), fmt)
+    assert words.shape == (3, n // lanes)
+    out = simd.unpack(words, fmt, n)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+@given(st.floats(-100, 100, allow_nan=False), st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_quant_error_bounded_property(scale_hint, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32)
+                    * (abs(scale_hint) + 0.1))
+    fmt = fxp.FXP8
+    q = fxp.fake_quant(x, fmt)
+    step = float(fxp.dynamic_scale(x, fmt))
+    assert float(jnp.max(jnp.abs(q - x))) <= step * 0.5 + 1e-6 * (
+        1 + float(jnp.max(jnp.abs(x))))

@@ -1,0 +1,119 @@
+"""Per-kernel tests: Pallas (interpret=True) vs pure-jnp oracles, sweeping
+shapes/dtypes/precisions, plus numerical quality vs the exact functions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cordic_af.ops import cordic_af
+from repro.kernels.cordic_af.ref import cordic_af_ref, exact_af_ref
+from repro.kernels.cordic_softmax.ops import cordic_softmax
+from repro.kernels.cordic_softmax.ref import (cordic_softmax_ref,
+                                              exact_softmax_ref)
+from repro.kernels.fxp_gemm.ops import fxp_gemm
+from repro.kernels.fxp_gemm.ref import fxp_gemm_codes_ref, fxp_gemm_ref
+from repro.kernels.fxp_gemm.fxp_gemm import fxp_gemm_pallas
+
+AFS = ("sigmoid", "tanh", "relu", "silu", "exp")
+SHAPES = [(8, 128), (64, 200), (3, 1000), (256, 512), (1, 7)]
+
+
+@pytest.mark.parametrize("af", AFS)
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_cordic_af_kernel_vs_oracle(af, shape, rng):
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32) * 4)
+    got = cordic_af(x, af)
+    ref = cordic_af_ref(x, af)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cordic_af_dtypes(dtype, rng):
+    x = jnp.asarray(rng.normal(size=(16, 256))).astype(dtype)
+    got = cordic_af(x, "sigmoid")
+    assert got.dtype == dtype
+    exact = exact_af_ref(x.astype(jnp.float32), "sigmoid")
+    assert float(jnp.mean(jnp.abs(got.astype(jnp.float32) - exact))) < 0.05
+
+
+@pytest.mark.parametrize("precision", ["fxp8", "fxp16", "fxp32"])
+def test_cordic_af_precision_quality(precision, rng):
+    """More bits (and their Pareto stages) -> closer to exact sigmoid."""
+    x = jnp.asarray(rng.normal(size=(32, 256)).astype(np.float32) * 3)
+    got = cordic_af(x, "sigmoid", precision=precision)
+    exact = exact_af_ref(x, "sigmoid")
+    mae = float(jnp.mean(jnp.abs(got - exact)))
+    assert mae < {"fxp8": 0.03, "fxp16": 0.03, "fxp32": 0.01}[precision]
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (10, 300), (16, 4096), (2, 17)],
+                         ids=str)
+def test_cordic_softmax_kernel_vs_oracle(shape, rng):
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32) * 5)
+    from repro.core.activation import softmax_lv_stages
+    lv = softmax_lv_stages(shape[-1])
+    got = cordic_softmax(x, lv_stages=lv)
+    ref = cordic_softmax_ref(x, lv_stages=lv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    # rows ~ 1 and close to the exact softmax (4 HR stages -> worst-case
+    # exp error ~6% — the paper's FxP8/16 Pareto operating point)
+    rows = np.asarray(jnp.sum(got, -1))
+    assert np.abs(rows - 1).max() < 0.05
+    ex = np.asarray(exact_softmax_ref(x))
+    assert np.abs(np.asarray(got) - ex).max() < 0.08
+    # FxP32 Pareto stages (8 HR) tighten it by ~an order of magnitude
+    got32 = cordic_softmax(x, hr_stages=8, lv_stages=max(lv, 14))
+    assert np.abs(np.asarray(got32) - ex).max() < 0.01
+
+
+@pytest.mark.parametrize("m,k,n", [(100, 192, 150), (128, 128, 128),
+                                   (1, 7, 3), (257, 384, 129)])
+@pytest.mark.parametrize("precision", ["fxp4", "fxp8"])
+def test_fxp_gemm_kernel_vs_oracle(m, k, n, precision, rng):
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    got = fxp_gemm(a, b, precision)
+    ref, *_ = fxp_gemm_ref(a, b, precision)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fxp_gemm_integer_exactness(rng):
+    """Kernel integer accumulation must be bit-exact vs the int oracle."""
+    xc = rng.integers(-127, 128, (128, 256)).astype(np.int8)
+    wc = rng.integers(-127, 128, (256, 128)).astype(np.int8)
+    got = fxp_gemm_pallas(jnp.asarray(xc), jnp.asarray(wc), interpret=True)
+    ref = fxp_gemm_codes_ref(jnp.asarray(xc), jnp.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_fxp4_packed_matches_unpacked(rng):
+    a = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+    unpacked = fxp_gemm(a, b, "fxp4", packed=False)
+    packed = fxp_gemm(a, b, "fxp4", packed=True)
+    np.testing.assert_allclose(np.asarray(unpacked), np.asarray(packed),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fxp_gemm_quantization_error_scales_with_bits(rng):
+    a = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    exact = np.asarray(a @ b)
+    rel = {}
+    for p in ("fxp4", "fxp8"):
+        got = np.asarray(fxp_gemm(a, b, p))
+        rel[p] = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+    assert rel["fxp8"] < rel["fxp4"] < 0.5
+    assert rel["fxp8"] < 0.05
+
+
+def test_fused_af_epilogue(rng):
+    a = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    out = fxp_gemm(a, b, "fxp8", af="relu")
+    assert float(jnp.min(out)) >= 0.0
+    out_s = fxp_gemm(a, b, "fxp8", af="sigmoid")
+    assert 0.0 <= float(jnp.min(out_s)) and float(jnp.max(out_s)) <= 1.0

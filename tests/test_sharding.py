@@ -1,0 +1,101 @@
+"""Sharding rule tests: logical->mesh resolution, divisibility/duplicate
+safety nets, shape-aware activation constraints, input/cache spec trees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import RULES_FSDP, RULES_TP, MeshRules
+from repro.launch import steps as S
+from repro.models import model as M
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_rules_tables():
+    assert RULES_TP["embed"] is None and RULES_FSDP["embed"] == "data"
+    assert RULES_TP["vocab"] == "model"
+
+
+def test_param_shardings_structure_matches(mesh):
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        axes = M.param_axes(cfg)
+        specs = S.model_state_specs(cfg, with_opt=False)
+        sh = MeshRules(mesh, fsdp=True).param_shardings(axes, specs)
+        assert (jax.tree.structure(sh) ==
+                jax.tree.structure(specs)), arch
+
+
+def test_divisibility_safety_net():
+    """A dim not divisible by its mesh axis must fall back to replicated."""
+    mesh2 = jax.make_mesh((1, 1), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = MeshRules(mesh2, fsdp=False)
+    sd = jax.ShapeDtypeStruct((7, 5), jnp.float32)  # 7 % 1 == 0 trivially
+    sh = rules.param_shardings(("vocab", "embed"), sd)
+    assert sh.spec == P("model", None)
+
+
+def test_duplicate_axis_safety_net(mesh):
+    """expert and ff both want 'model': leftmost wins, second replicates."""
+    rules = MeshRules(mesh, fsdp=False)
+    n = mesh.shape["model"]
+    sd = jax.ShapeDtypeStruct((n * 2, 8, n * 4), jnp.float32)
+    sh = rules.param_shardings(("expert", "embed", "ff"), sd)
+    spec = sh.spec
+    assert list(spec).count("model") <= 1
+
+
+def test_constraint_shape_aware(mesh):
+    rules = MeshRules(mesh, fsdp=False)
+    x = jnp.zeros((4, 1, 8))   # S=1 can't shard over model
+    y = rules.constraint(x, "model", None)
+    assert y.shape == x.shape
+    z = rules.seq(jnp.zeros((4, 16, 8)))
+    assert z.shape == (4, 16, 8)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_input_specs_all_cells(arch, shape):
+    cfg = get_config(arch)
+    specs = S.input_specs(cfg, shape)
+    from repro.configs.base import SHAPES
+    b = SHAPES[shape]["global_batch"]
+    if "batch" in specs:
+        first = specs["batch"][next(iter(specs["batch"]))]
+        assert first.shape[0] == b
+    else:
+        assert specs["tokens"].shape[0] == b
+        assert "cache" in specs
+
+
+def test_cache_shardings_cover_tree(mesh):
+    cfg = get_config("mistral_nemo_12b")
+    rules = MeshRules(mesh)
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 128, 1024))
+    sh = S.cache_shardings(cfg, rules, cache, 128)
+    assert jax.tree.structure(sh) == jax.tree.structure(cache)
+
+
+def test_dryrun_collective_parser():
+    from repro.launch.dryrun import _type_bytes, parse_collectives
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[256,256]{1,0} all-reduce(%y), channel_id=2
+  %rs = f32[8,32]{1,0} reduce-scatter(%z)
+  %a2a.5 = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%p, %q)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["bytes"] == 16 * 1024 * 2
+    assert out["all-reduce"]["bytes"] == 256 * 256 * 4 * 2  # ring 2x
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["all-to-all"]["bytes"] == 2 * 16 * 4
