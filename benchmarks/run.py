@@ -6,6 +6,7 @@
   bench_systolic     Table VIII (8x8 array GOPS/W)
   bench_accuracy     Fig. 5 (<2% accuracy with CORDIC MAC+SST)
   bench_roofline     EXPERIMENTS.md §Roofline (from dry-run artifacts)
+  bench_backend      reference vs pallas GEMM + packed weight bytes-moved
 
 Prints ``name,us_per_call,derived`` CSV at the end.
 """
@@ -16,11 +17,11 @@ import traceback
 
 
 def main() -> None:
-    from . import (bench_accuracy, bench_af_error, bench_dma, bench_roofline,
-                   bench_systolic, bench_throughput)
+    from . import (bench_accuracy, bench_af_error, bench_backend, bench_dma,
+                   bench_roofline, bench_systolic, bench_throughput)
     rows = []
     for mod in (bench_af_error, bench_throughput, bench_dma, bench_systolic,
-                bench_accuracy, bench_roofline):
+                bench_accuracy, bench_roofline, bench_backend):
         print(f"\n==== {mod.__name__} ====")
         try:
             mod.run(rows)

@@ -1,16 +1,22 @@
 """Flex-PE core: CORDIC engine, FxP quantization, SIMD packing, configurable
 activation functions, precision policy, systolic/DMA models."""
 from .activation import AF_NAMES, flex_af
+# NOTE: the `backend` submodule is deliberately NOT re-exported by name —
+# `from repro.core import backend` must yield the module (whose `backend()`
+# context manager is the override entry point), not shadow it.
+from .backend import BACKENDS
 from .cordic import PARETO_STAGES
 from .flexpe import FlexPE, FlexPEArray
 from .fxp import (FORMATS, FXP4, FXP8, FXP16, FXP32, FxPFormat, dequantize,
                   fake_quant, fake_quant_ste, quantize)
 from .precision import PrecisionPolicy, qeinsum, qmatmul
+from .qtensor import QuantizedTensor, dequantize_params, quantize_params
 from .simd import pack, packed_len, unpack
 
 __all__ = [
-    "AF_NAMES", "flex_af", "PARETO_STAGES", "FlexPE", "FlexPEArray",
-    "FORMATS", "FXP4", "FXP8", "FXP16", "FXP32", "FxPFormat", "dequantize",
-    "fake_quant", "fake_quant_ste", "quantize", "PrecisionPolicy",
-    "qeinsum", "qmatmul", "pack", "packed_len", "unpack",
+    "AF_NAMES", "flex_af", "BACKENDS", "backend", "PARETO_STAGES", "FlexPE",  # noqa: F822 — `backend` is the submodule
+    "FlexPEArray", "FORMATS", "FXP4", "FXP8", "FXP16", "FXP32", "FxPFormat",
+    "dequantize", "fake_quant", "fake_quant_ste", "quantize",
+    "PrecisionPolicy", "qeinsum", "qmatmul", "QuantizedTensor",
+    "dequantize_params", "quantize_params", "pack", "packed_len", "unpack",
 ]

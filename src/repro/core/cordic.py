@@ -105,6 +105,16 @@ def exp_float(z: jax.Array, stages: int, **kw) -> jax.Array:
 _LN2 = math.log(2.0)
 
 
+def exp2_int(k: jax.Array) -> jax.Array:
+    """Exact 2^k for integer-valued f32 k via f32 exponent-field
+    construction — the barrel-shift analogue (no transcendental, no
+    multiplier). `jnp.exp2` is a polynomial approximation on some backends
+    and NOT exact at integer inputs; this is, so the reference CORDIC exp
+    is bit-identical to the Pallas kernel's."""
+    ki = jnp.clip(k, -126.0, 127.0).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((ki + 127) << 23, jnp.float32)
+
+
 def extended_exp_float(z: jax.Array, stages: int,
                        repeat_iters: bool = True, **kw) -> jax.Array:
     """Range-extended exp: z = k*ln2 + r, e^z = 2^k * e^r.
@@ -121,7 +131,7 @@ def extended_exp_float(z: jax.Array, stages: int,
     z = jnp.clip(z, -87.0, 88.0)  # f32 exp range; hardware saturation
     k = jnp.floor(z * (1.0 / _LN2) + 0.5)
     r = z - k * _LN2  # r in [-ln2/2, ln2/2] ⊂ [-HR_MAX, HR_MAX]
-    return exp_float(r, stages, repeat_iters=repeat_iters, **kw) * jnp.exp2(k)
+    return exp_float(r, stages, repeat_iters=repeat_iters, **kw) * exp2_int(k)
 
 
 def lv_divide_float(num: jax.Array, den: jax.Array, stages: int) -> jax.Array:

@@ -6,11 +6,20 @@ step (XLA needs static dtypes); "run-time switching" is realized as
 selection among compiled specializations — the idiomatic TPU equivalent of
 writing mode registers between workloads.
 
-`qmatmul` is the single matmul entry point used by all models: it applies
-fake-quant (with straight-through gradients) to both operands per the policy,
-so the same model function serves fp/bf16 baseline, FxP QAT training, and
-quantized inference. The serving path can swap in the real packed-int
-`kernels/fxp_gemm` implementation (same numerics contract).
+`qmatmul` is the single matmul entry point used by all models. Which
+implementation serves it is the policy's `backend` field (overridable with
+`with core.backend.backend(...)`):
+
+  * 'reference'        — fake-quant float path (STE gradients): training,
+                         QAT, and the numerics oracle.
+  * 'pallas'           — the real packed-int `kernels/fxp_gemm` datapath
+                         (+ CORDIC AF/softmax kernels) behind the same
+                         numerics contract; serving fast path, forward-only.
+  * 'pallas-interpret' — same kernels in Pallas interpret mode (CPU).
+  * 'auto'             — pallas on TPU, pallas-interpret elsewhere.
+
+Weights may be plain float arrays or `core.qtensor.QuantizedTensor`
+(quantize-once packed storage); both backends accept both.
 """
 from __future__ import annotations
 
@@ -20,10 +29,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+# import names, not the module: the package re-exports the `backend`
+# context manager under the same name as the submodule
+from .backend import is_pallas as _is_pallas
+from .backend import resolve as _resolve_backend
 from .activation import flex_af
-from .fxp import FORMATS, fake_quant_ste
+from .fxp import fake_quant_ste
+from .qtensor import QuantizedTensor
 
 __all__ = ["PrecisionPolicy", "qmatmul", "qeinsum"]
+
+
+def _dispatch():
+    # lazy: core must stay importable without pulling kernel modules in
+    from ..kernels import dispatch
+    return dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +55,8 @@ class PrecisionPolicy:
     attn_softmax: 'cordic' routes attention softmax through the Flex-PE
       softmax path; 'exact' uses jax.nn.softmax.
     grad_compression: 'none' | 'fxp8' — quantized DP gradient all-reduce.
+    backend: kernel backend serving qmatmul / act / softmax — 'reference',
+      'pallas', 'pallas-interpret', or 'auto' (see module docstring).
     """
     name: str = "bf16"
     matmul: Optional[str] = None
@@ -55,6 +77,8 @@ class PrecisionPolicy:
     # constrain TP matmul OUTPUTS to the seq-sharded layout before the
     # residual add, turning all-reduces into reduce-scatters (half bytes)
     seq_outputs: bool = False
+    # kernel backend for qmatmul / act / softmax (see module docstring)
+    backend: str = "reference"
 
     # -- factories ---------------------------------------------------------
     @staticmethod
@@ -64,29 +88,44 @@ class PrecisionPolicy:
 
     @staticmethod
     def flexpe(bits: int = 8, af_impl: str = "cordic",
-               grad_compression: str = "none") -> "PrecisionPolicy":
+               grad_compression: str = "none",
+               backend: str = "reference") -> "PrecisionPolicy":
         """Paper-faithful FxP<bits> mode: quantized matmuls + CORDIC AFs."""
         fmt = f"fxp{bits}"
         return PrecisionPolicy(
             name=f"flexpe-{fmt}", matmul=fmt, af=fmt, af_impl=af_impl,
             attn_softmax=af_impl if af_impl == "cordic" else "exact",
             kv_cache=fmt if bits >= 8 else "fxp8",
-            grad_compression=grad_compression)
+            grad_compression=grad_compression, backend=backend)
 
     @staticmethod
-    def edge4() -> "PrecisionPolicy":
+    def edge4(backend: str = "reference") -> "PrecisionPolicy":
         """FxP4 edge-inference mode (paper §III-B: first 4-bit config-AF)."""
         return PrecisionPolicy(name="flexpe-fxp4", matmul="fxp4", af="fxp4",
                                af_impl="cordic", attn_softmax="cordic",
-                               kv_cache="fxp8")
+                               kv_cache="fxp8", backend=backend)
+
+    def with_backend(self, backend: str) -> "PrecisionPolicy":
+        return dataclasses.replace(self, backend=backend)
+
+    def resolved_backend(self) -> str:
+        """Concrete backend name after `with backend(...)` override + auto."""
+        return _resolve_backend(self.backend)
 
     # -- ops ---------------------------------------------------------------
     def act(self, x: jax.Array, af: str, axis: int = -1) -> jax.Array:
+        be = self.resolved_backend()
+        if (_is_pallas(be) and self.af_impl == "cordic"
+                and af != "softmax"):
+            return _dispatch().act(x, af, self, backend=be)
         return flex_af(x, af, precision=self.af, impl=self.af_impl, axis=axis)
 
     def softmax(self, x: jax.Array, axis: int = -1) -> jax.Array:
         if self.attn_softmax != "cordic":
             return flex_af(x, "softmax", precision=None, impl="exact", axis=axis)
+        be = self.resolved_backend()
+        if _is_pallas(be) and axis in (-1, x.ndim - 1):
+            return _dispatch().softmax(x, self, backend=be, axis=axis)
         from .activation import default_stages, softmax_lv_stages
         hr, _ = default_stages(self.af)
         lv = softmax_lv_stages(x.shape[axis], self.af)
@@ -100,12 +139,28 @@ def _maybe_q(x: jax.Array, fmt_name: Optional[str]) -> jax.Array:
     return fake_quant_ste(x, fmt_name)
 
 
-def qmatmul(x: jax.Array, w: jax.Array, policy: Optional[PrecisionPolicy],
-            preferred=jnp.float32) -> jax.Array:
-    """Policy-aware matmul: fake-quant operands to the FxP grid (STE grads),
-    accumulate in fp32 (the hardware's FxP32 accumulator). With
-    policy.matmul_out='bf16' the dot OUTPUT (the tensor that crosses TP
-    all-reduces) is bf16 — the MXU's internal accumulation stays fp32."""
+def qmatmul(x: jax.Array, w, policy: Optional[PrecisionPolicy],
+            preferred=jnp.float32, af: Optional[str] = None) -> jax.Array:
+    """Policy-aware matmul, dispatched per `policy.backend`.
+
+    reference: fake-quant operands to the FxP grid (STE grads), accumulate
+    in fp32 (the hardware's FxP32 accumulator). With policy.matmul_out=
+    'bf16' the dot OUTPUT (the tensor that crosses TP all-reduces) is bf16 —
+    the MXU's internal accumulation stays fp32.
+
+    pallas(-interpret): real integer GEMM on quantized codes with the
+    dequant (+ fused `af` epilogue) inside the kernel; `w` may be a
+    `QuantizedTensor` so only packed codes move HBM→VMEM.
+
+    `af` (optional) applies the named Flex-PE activation to the output —
+    fused into the kernel epilogue on pallas, `policy.act` post-op on
+    reference.
+    """
+    be = _resolve_backend(policy.backend if policy is not None else None)
+    if _is_pallas(be) or isinstance(w, QuantizedTensor) or af is not None:
+        # dispatch owns QuantizedTensor plumbing and the shared
+        # accumulator-AF contract (identical on every backend)
+        return _dispatch().matmul(x, w, policy, backend=be, af=af)
     if policy is not None and policy.matmul is not None:
         x = _maybe_q(x, policy.matmul)
         w = _maybe_q(w, policy.matmul)
@@ -116,8 +171,11 @@ def qmatmul(x: jax.Array, w: jax.Array, policy: Optional[PrecisionPolicy],
         preferred_element_type=preferred).astype(x.dtype)
 
 
-def qeinsum(spec: str, x: jax.Array, w: jax.Array,
-            policy: Optional[PrecisionPolicy]) -> jax.Array:
+def qeinsum(spec: str, x: jax.Array, w, policy: Optional[PrecisionPolicy]):
+    """Einsum sibling of qmatmul. Reference-only (MoE expert banks): a
+    QuantizedTensor operand is materialised back to float first."""
+    if isinstance(w, QuantizedTensor):
+        w = w.dequantize(x.dtype)
     if policy is not None and policy.matmul is not None:
         x = _maybe_q(x, policy.matmul)
         w = _maybe_q(w, policy.matmul)

@@ -1,0 +1,180 @@
+"""Quantize-once weight storage — the SIMD-packed serving format.
+
+``QuantizedTensor`` is a pytree leaf-pair (integer codes + per-channel
+scale) replacing a float matmul weight. Serving with it moves the *codes*
+HBM→VMEM instead of re-fake-quantizing a bf16 tensor every step:
+
+    FxP4  packed nibbles (via `core.simd.pack` int32 words)   8× fewer bytes
+    FxP8  int8 codes                                          4× fewer bytes
+    FxP16 int16 codes                                         2× fewer bytes
+    (reductions vs. an fp32 master copy; 4×/2×/1× vs. bf16)
+
+Codes are produced by `core.fxp.quantize` with a per-output-channel dynamic
+scale (axis=-2 of a [K, N] weight), so dequant is `codes * scale[1, N]` —
+the scale rides along the GEMM epilogue. Stacked layer weights [L, K, N]
+(the `jax.lax.scan` layout of model blocks) quantize per (layer, channel).
+
+`quantize_params` is the model-surgery pass: it walks a param tree and
+replaces known matmul-weight leaves (wq/wk/wv/wo, w1/w2/w3, lm_head,
+in_proj) with QuantizedTensor, leaving embeddings, norms, and biases float.
+The result is scan-compatible: both leaves carry the same leading layer
+axis, so block scans slice them together.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .fxp import FORMATS, FxPFormat, code_dtype, quantize
+from .simd import pack, unpack
+
+__all__ = ["QuantizedTensor", "quantize_tensor", "quantize_params",
+           "dequantize_params", "packed_bytes", "QUANT_PARAM_KEYS"]
+
+#: Param-tree dict keys that hold matmul weights (consumed by `qmatmul`).
+#: Embeddings (gather), norm weights, and biases stay float.
+QUANT_PARAM_KEYS = frozenset(
+    {"wq", "wk", "wv", "wo", "w1", "w2", "w3", "lm_head", "in_proj",
+     "out_proj"})
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Integer weight codes + per-channel scale (one FxP-quantized matrix).
+
+    data:  codes in the narrowest int dtype ([.., K, N]), or — for packed
+           FxP4 — `core.simd.pack` int32 words ([.., K, ceil(N/8)], the
+           lane-packed SIMD storage; N padded to a lane multiple).
+    scale: f32 per-output-channel scale, broadcastable [.., 1, N]
+           (or [.., 1, 1] for per-tensor quantization).
+    fmt_name: FxP format of the codes ('fxp4'...'fxp32'). Static.
+    n:     logical output-feature count (un-padded last dim). Static.
+    packed: whether `data` holds lane-packed int32 words. Static.
+    """
+    data: jax.Array
+    scale: jax.Array
+    fmt_name: str
+    n: int
+    packed: bool
+
+    # -- pytree protocol (leaves slice through scans / tree.map) -----------
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.fmt_name, self.n, self.packed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        return cls(data, scale, *aux)
+
+    # -- views -------------------------------------------------------------
+    @property
+    def fmt(self) -> FxPFormat:
+        return FORMATS[self.fmt_name]
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (unpacked, unpadded) shape."""
+        return tuple(self.data.shape[:-1]) + (self.n,)
+
+    @property
+    def ndim(self) -> int:
+        return self.data.ndim
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes of weight storage actually moved HBM→VMEM per use."""
+        return int(self.data.size * self.data.dtype.itemsize
+                   + self.scale.size * self.scale.dtype.itemsize)
+
+    def codes(self) -> jax.Array:
+        """Sign-extended integer codes [.., K, N] (unpacks FxP4 words)."""
+        if not self.packed:
+            return self.data
+        return unpack(self.data, self.fmt, self.n)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """Materialise the float weight (reference backend / debugging)."""
+        return (self.codes().astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def quantize_tensor(w: jax.Array, fmt_name: str, packed: Optional[bool] = None,
+                    per_channel: bool = True) -> QuantizedTensor:
+    """Quantize a float weight [.., K, N] once, for serving-time reuse."""
+    fmt = FORMATS[fmt_name]
+    if packed is None:
+        packed = fmt.bits == 4
+    if packed and fmt.bits != 4:
+        raise ValueError("lane-packed storage is FxP4-only "
+                         f"(got {fmt_name})")
+    axis = -2 if per_channel else (-2, -1)
+    codes, scale = quantize(w, fmt, axis=axis)
+    n = w.shape[-1]
+    if packed:
+        lanes = fmt.lanes_per_word  # 8 nibbles / int32 word
+        pad = (-n) % lanes
+        c32 = codes.astype(jnp.int32)
+        if pad:
+            c32 = jnp.pad(c32, [(0, 0)] * (c32.ndim - 1) + [(0, pad)])
+        data = pack(c32, fmt)
+    else:
+        data = codes.astype(code_dtype(fmt))
+    return QuantizedTensor(data, scale.astype(jnp.float32), fmt_name, n,
+                           packed)
+
+
+def _is_weight_leaf(v: Any) -> bool:
+    # 2-D ([K, N]) or scan-stacked 3-D ([L, K, N]) matmul weights only.
+    # 4-D leaves (stacked MoE expert banks [L, E, K, N], consumed by
+    # qeinsum) stay float — the einsum path is reference-only.
+    return (isinstance(v, jax.Array) and v.ndim in (2, 3)
+            and jnp.issubdtype(v.dtype, jnp.floating))
+
+
+def quantize_params(params: Any, fmt_name: str, packed: Optional[bool] = None,
+                    per_channel: bool = True,
+                    keys: frozenset = QUANT_PARAM_KEYS) -> Any:
+    """Model surgery: replace matmul-weight leaves with QuantizedTensor.
+
+    Walks nested dicts by key name; only float leaves with ndim >= 2 under a
+    key in `keys` are converted (biases under e.g. 'bq' and 1-D norm scales
+    pass through untouched). Works on scan-stacked [L, K, N] weights.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in keys and _is_weight_leaf(v):
+                    out[k] = quantize_tensor(v, fmt_name, packed=packed,
+                                             per_channel=per_channel)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def dequantize_params(params: Any, dtype=jnp.bfloat16) -> Any:
+    """Inverse surgery: materialise every QuantizedTensor back to float."""
+    return jax.tree.map(
+        lambda v: v.dequantize(dtype) if isinstance(v, QuantizedTensor) else v,
+        params, is_leaf=lambda v: isinstance(v, QuantizedTensor))
+
+
+def packed_bytes(params: Any) -> tuple[int, int]:
+    """(quantized_bytes, fp32_equivalent_bytes) over QuantizedTensor leaves."""
+    qb = fb = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda v: isinstance(v, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            qb += leaf.nbytes
+            # python ints: full-size stacked weights overflow int32
+            fb += 4 * math.prod(leaf.shape)
+    return qb, fb

@@ -38,7 +38,6 @@ def pack(codes: jax.Array, fmt: FxPFormat) -> jax.Array:
     c = (codes.astype(jnp.int32) & mask).reshape(*lead, n // lanes, lanes)
     shifts = (jnp.arange(lanes, dtype=jnp.int32) * fmt.bits)
     # OR the shifted lanes together
-    words = jnp.bitwise_or.reduce if hasattr(jnp.bitwise_or, "reduce") else None
     shifted = jnp.left_shift(c, shifts)
     out = shifted[..., 0]
     for j in range(1, lanes):

@@ -19,18 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ...core.cordic import _hr_schedule, hyperbolic_gain
+from ...core.cordic import _hr_schedule, exp2_int as _exp2_int, hyperbolic_gain
 
 _LN2 = math.log(2.0)
 
 DEFAULT_BLOCK = (256, 512)
-
-
-def _exp2_int(k: jax.Array) -> jax.Array:
-    """2^k for integer-valued f32 k via exponent-field construction —
-    the barrel-shift analogue (no transcendental, no multiplier)."""
-    ki = jnp.clip(k, -126.0, 127.0).astype(jnp.int32)
-    return jax.lax.bitcast_convert_type((ki + 127) << 23, jnp.float32)
 
 
 def _hr_exp(z, hr_stages, repeat_iters):
@@ -52,11 +45,14 @@ def _hr_exp(z, hr_stages, repeat_iters):
 
 
 def _lv_div(num, den, lv_stages):
-    """num/den on a block (|num| <= |den|): LV CORDIC shift-add."""
+    """num/den on a block (|num| <= |den|): LV CORDIC shift-add.
+    Same d-selection rule as core.cordic.lv_divide_float (d = -sign(x*y),
+    ties to +1) so kernel and reference AFs are bit-identical."""
     x, y = den, num
     q = jnp.zeros_like(num)
     for i in range(1, lv_stages + 1):
-        d = jnp.where((x * y) < 0, 1.0, -1.0)
+        d = -jnp.sign(x * y)
+        d = jnp.where(d == 0, 1.0, d)
         y = y + d * x * (2.0 ** (-i))
         q = q - d * (2.0 ** (-i))
     return q
@@ -77,6 +73,11 @@ def _af_block(x, af: str, hr: int, lv: int, repeat_iters: bool):
     if af == "silu":
         e = _hr_exp(-jnp.abs(x), hr, repeat_iters)
         num = jnp.where(x >= 0, jnp.ones_like(e), e)
+        return x * _lv_div(num, 1.0 + e, lv)
+    if af == "gelu":  # sigmoid approximation — same CORDIC hardware (§IV-B)
+        z = 1.702 * x
+        e = _hr_exp(-jnp.abs(z), hr, repeat_iters)
+        num = jnp.where(z >= 0, jnp.ones_like(e), e)
         return x * _lv_div(num, 1.0 + e, lv)
     raise ValueError(f"unsupported af {af!r}")
 

@@ -1,0 +1,271 @@
+"""Backend dispatch — routes PrecisionPolicy ops to kernel implementations.
+
+A small registry maps (op, backend) -> implementation:
+
+    op       : 'matmul' | 'act' | 'softmax'
+    backend  : 'reference' (fake-quant XLA path, gradient-capable)
+               'pallas'    (real integer kernels: fxp_gemm + CORDIC AF/softmax)
+
+'pallas-interpret' resolves to the 'pallas' implementations with
+interpret=True (kernel bodies run as traced jnp on CPU). `core.precision`
+calls through here; this module owns all quantize/pad/reshape plumbing so
+kernels see MXU-aligned 2-D code blocks.
+
+The pallas matmul is the serving fast path: activations are dynamically
+quantized per-tensor, weights arrive either as floats (quantized on the
+fly, reference-identical per-tensor scales) or as `QuantizedTensor`
+(quantize-once storage: int codes + per-channel scale, FxP4 nibble-packed —
+the codes are what moves HBM→VMEM). Dequant and the optional Flex-PE AF are
+fused into the GEMM epilogue: MAC→AF is one kernel launch.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.activation import default_stages, flex_af
+from ..core.fxp import FORMATS, fake_quant, quantize
+from ..core.qtensor import QuantizedTensor
+from .cordic_af.ops import cordic_af
+from .cordic_softmax.ops import cordic_softmax
+from .fxp_gemm.fxp_gemm import FUSED_AFS, fxp_gemm_fused_pallas
+from .fxp_gemm.ops import pad_to, round_up
+
+__all__ = ["register", "lookup", "matmul", "act", "softmax",
+           "supports_fused_af", "PALLAS_AFS"]
+
+#: AFs the pallas act/epilogue path implements (Sel_AF minus softmax, which
+#: is a row-reduction kernel of its own).
+PALLAS_AFS = FUSED_AFS
+
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+
+def register(op: str, backend: str):
+    """Decorator: register an implementation for (op, backend)."""
+    def deco(fn):
+        _REGISTRY[(op, backend)] = fn
+        return fn
+    return deco
+
+
+def lookup(op: str, backend: str) -> tuple[Callable, bool]:
+    """-> (impl, interpret_flag). 'pallas-interpret' shares pallas impls."""
+    concrete = "pallas" if backend == "pallas-interpret" else backend
+    try:
+        fn = _REGISTRY[(op, concrete)]
+    except KeyError:
+        raise NotImplementedError(
+            f"no implementation registered for op={op!r} backend={backend!r}"
+            f" (have {sorted(_REGISTRY)})") from None
+    return fn, backend == "pallas-interpret"
+
+
+def supports_fused_af(af: Optional[str]) -> bool:
+    return af is None or af in PALLAS_AFS
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+def _af_on_accumulator(out, af, policy):
+    """The fused MAC→AF contract, shared by both backends: the AF consumes
+    the raw (dequantized) accumulator output — the hardware AF block reads
+    the FxP32 accumulator directly, there is no re-quantize between MAC and
+    AF — and the AF *result* is snapped to the policy's af grid (the
+    write-back register). Both backends implement exactly this, so the
+    reference backend stays the numerics oracle for the fused pipeline."""
+    if policy is None:
+        return flex_af(out, af, impl="exact")
+    stages = (default_stages(policy.af) if policy.af_impl == "cordic"
+              else None)
+    out = flex_af(out, af, precision=None, impl=policy.af_impl,
+                  stages=stages)
+    if policy.af is not None:
+        out = fake_quant(out.astype(jnp.float32),
+                         FORMATS[policy.af]).astype(out.dtype)
+    return out
+
+
+def _x_fmt(w_fmt_name, policy):
+    name = (policy.matmul if policy is not None
+            and policy.matmul is not None else w_fmt_name)
+    return FORMATS[name]
+
+
+@register("matmul", "reference")
+def _matmul_reference(x, w, policy, af=None, interpret=False):
+    """Fake-quant float path (STE gradients) — the training/oracle backend.
+
+    Plain float weights: the original bf16-operand QAT path. QuantizedTensor
+    weights (≤8-bit): the same exact-integer contract as the pallas kernel —
+    quantize the activation, XLA integer dot_general over the stored codes,
+    dequant by the folded scale. Integer sums are associative, so reference
+    and pallas are BIT-identical here under any compilation — that is what
+    makes greedy serving deterministic across backends. >8-bit codes fall
+    back to an f32 dot (same compromise as the kernel's f32 accumulator).
+
+    The optional `af` runs on the accumulator output BEFORE the cast back to
+    x.dtype — the same order as the pallas fused epilogue."""
+    del interpret
+    from ..core.fxp import fake_quant_ste
+    orig_dtype = x.dtype
+    if isinstance(w, QuantizedTensor):
+        fmt_x = _x_fmt(w.fmt_name, policy)
+        if w.fmt.bits <= 8 and fmt_x.bits <= 8:
+            *lead, kdim = x.shape
+            xc, sx = quantize(x.reshape(-1, kdim).astype(jnp.float32), fmt_x)
+            acc = jax.lax.dot_general(
+                xc.astype(jnp.int32), w.codes().astype(jnp.int32),
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+            scale = jnp.broadcast_to((sx * w.scale).astype(jnp.float32),
+                                     (1, w.n))
+            out = acc.astype(jnp.float32) * scale
+            if af is not None:
+                out = _af_on_accumulator(out, af, policy)
+            return out.reshape(*lead, w.n).astype(orig_dtype)
+        w = w.dequantize(jnp.float32)
+        x = x.astype(jnp.float32)
+        if policy is not None and policy.matmul is not None:
+            x = fake_quant_ste(x, policy.matmul)
+    elif policy is not None and policy.matmul is not None:
+        x = fake_quant_ste(x, policy.matmul)
+        w = fake_quant_ste(w, policy.matmul)
+    pref = (jnp.bfloat16 if policy is not None
+            and policy.matmul_out == "bf16" else jnp.float32)
+    out = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=pref)
+    if af is not None:
+        out = _af_on_accumulator(out, af, policy)
+    return out.astype(orig_dtype)
+
+
+@register("matmul", "pallas")
+def _matmul_pallas(x, w, policy, af=None, interpret=False):
+    """Integer-kernel path: quantize activation -> packed-code GEMM with
+    fused dequant(+AF) epilogue. Forward-only (serving)."""
+    fmt_name = (w.fmt_name if isinstance(w, QuantizedTensor)
+                else (policy.matmul if policy is not None else None))
+    if fmt_name is None:
+        # native-precision policy: nothing to quantize — reference dot
+        return _matmul_reference(x, w, policy, af=af)
+    # fuse the AF into the kernel epilogue only when it is the CORDIC
+    # datapath; 'exact'-AF policies keep the kernel GEMM and apply the
+    # shared accumulator-AF contract as a post-op
+    fuse_af = (af is not None and af in PALLAS_AFS
+               and (policy is None or policy.af_impl == "cordic"))
+    x_fmt = FORMATS[policy.matmul] if (policy is not None
+                                       and policy.matmul) else FORMATS[fmt_name]
+
+    orig_dtype = x.dtype
+    *lead, kdim = x.shape
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    xc, sx = quantize(x2.astype(jnp.float32), x_fmt)
+
+    if isinstance(w, QuantizedTensor):
+        assert w.ndim == 2, "pallas matmul wants 2-D weights (per-layer slice)"
+        n, packed, wscale = w.n, w.packed, w.scale
+        if packed:
+            # lane-packed int32 words -> nibble bytes [K, n8/2]; byte j holds
+            # elements 2j (lo nibble) / 2j+1 (hi) — simd.pack lane order
+            kd, nwords = w.data.shape
+            wb = jax.lax.bitcast_convert_type(w.data, jnp.int8)
+            wb = wb.reshape(kd, nwords * 4)
+        else:
+            wb = w.data
+    else:
+        wc, sw = quantize(w.astype(jnp.float32), FORMATS[fmt_name])
+        wb, wscale, packed, n = wc, sw.reshape(1, 1), False, w.shape[-1]
+
+    scale = jnp.broadcast_to((sx * wscale).astype(jnp.float32), (1, n))
+
+    # pad to MXU-aligned blocks (zero codes contribute nothing to the dot;
+    # padded scale columns are sliced away below)
+    bm = min(128, round_up(max(m, 1), 8))
+    bk = 128
+    bn = 128
+    xc = pad_to(pad_to(xc, bm, 0), bk, 1)
+    wb = pad_to(wb, bk, 0)
+    if packed:
+        wb = pad_to(wb, bn // 2, 1)
+        n_k = wb.shape[1] * 2
+    else:
+        wb = pad_to(wb, bn, 1)
+        n_k = wb.shape[1]
+    scale = pad_to(scale, n_k, 1, value=1.0)
+
+    hr, lv = default_stages(policy.af if policy is not None else None)
+    out = fxp_gemm_fused_pallas(
+        xc, wb, scale, packed=packed, af=af if fuse_af else None,
+        hr_stages=hr, lv_stages=lv, blocks=(bm, bn, bk),
+        interpret=interpret)
+    out = out[:m, :n]
+    if fuse_af:
+        # write-back quantization of the AF result (the kernel's epilogue
+        # computed AF on the raw accumulator — same contract as reference)
+        if policy is not None and policy.af is not None:
+            out = fake_quant(out, FORMATS[policy.af])
+    elif af is not None:
+        out = _af_on_accumulator(out, af, policy)
+    return out.reshape(*lead, n).astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# activation / softmax
+# ---------------------------------------------------------------------------
+
+@register("act", "reference")
+def _act_reference(x, af, policy, interpret=False):
+    del interpret
+    precision = policy.af if policy is not None else None
+    impl = policy.af_impl if policy is not None else "cordic"
+    return flex_af(x, af, precision=precision, impl=impl)
+
+
+@register("act", "pallas")
+def _act_pallas(x, af, policy, interpret=False):
+    if af == "identity":
+        return x
+    if af not in PALLAS_AFS:
+        return _act_reference(x, af, policy)
+    precision = policy.af if policy is not None else None
+    return cordic_af(x, af, precision=precision, interpret=interpret)
+
+
+@register("softmax", "reference")
+def _softmax_reference(x, policy, axis=-1, interpret=False):
+    del interpret
+    precision = policy.af if policy is not None else None
+    return flex_af(x, "softmax", precision=precision, impl="cordic", axis=axis)
+
+
+@register("softmax", "pallas")
+def _softmax_pallas(x, policy, axis=-1, interpret=False):
+    if axis not in (-1, x.ndim - 1):
+        return _softmax_reference(x, policy, axis=axis)
+    precision = policy.af if policy is not None else None
+    return cordic_softmax(x, precision=precision, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# public entry points (called from core.precision)
+# ---------------------------------------------------------------------------
+
+def matmul(x, w, policy, backend: str, af: Optional[str] = None):
+    fn, interp = lookup("matmul", backend)
+    return fn(x, w, policy, af=af, interpret=interp)
+
+
+def act(x, af: str, policy, backend: str):
+    fn, interp = lookup("act", backend)
+    return fn(x, af, policy, interpret=interp)
+
+
+def softmax(x, policy, backend: str, axis: int = -1):
+    fn, interp = lookup("softmax", backend)
+    return fn(x, policy, axis=axis, interpret=interp)

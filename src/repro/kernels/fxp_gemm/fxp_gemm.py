@@ -1,15 +1,27 @@
 """Pallas TPU kernel: multi-precision fixed-point GEMM (the Flex-PE MAC array).
 
-The systolic-array side of the paper: quantized GEMM over int8 codes with
+The systolic-array side of the paper: quantized GEMM over integer codes with
 int32 accumulation (the hardware's FxP32 accumulator), MXU-aligned
 128x128x128 default blocks, and an optional packed-int4 operand path where
 two FxP4 codes share one int8 byte — the SIMD storage win: int4 weights move
 half the HBM->VMEM bytes and unpack with shift/mask inside the kernel,
 mirroring the PE's lane-split barrel shifter.
 
-Grid is (M/bm, N/bn, K/bk) with K innermost; the int32 output block is
-zeroed at k==0 and accumulated across K steps (output-stationary, exact
-integer arithmetic — bit-identical to the ref oracle).
+Grid is (M/bm, N/bn, K/bk) with K innermost; accumulation is
+output-stationary across K steps. Two kernel families:
+
+  * code kernels (`fxp_gemm_pallas`, `fxp4_gemm_packed_pallas`) — int32
+    output of raw code dots, bit-identical to the ref oracle.
+  * fused kernel (`fxp_gemm_fused_pallas`) — int32 VMEM scratch accumulator
+    with a dequant (+ optional CORDIC AF) epilogue at the last K step, so
+    the PE's MAC→AF pipeline is ONE kernel launch: f32 output =
+    AF(acc * scale[1, N]), scale carrying the per-output-channel weight
+    scale folded with the dynamic activation scale.
+
+Code dtypes: int8 codes (FxP4/8) accumulate exactly in int32; int16/int32
+codes (FxP16/32) accumulate in f32 — the software stand-in for the
+hardware's widened accumulator (documented compromise: f32 has a 24-bit
+mantissa, matching the reference backend's own accumulation).
 """
 from __future__ import annotations
 
@@ -18,8 +30,27 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..cordic_af.cordic_af import _af_block
 
 DEFAULT_BLOCKS = (128, 128, 128)
+
+#: AFs the fused epilogue supports (the Flex-PE Sel_AF set, minus softmax
+#: which needs a row reduction — that lives in kernels/cordic_softmax).
+FUSED_AFS = ("relu", "sigmoid", "tanh", "silu", "gelu", "exp")
+
+
+def _unpack_nibbles(wp: jax.Array) -> jax.Array:
+    """packed int8 bytes [bk, bn//2] -> int32 codes [bk, bn]: low nibble =
+    even element, high nibble = odd (lane order of core.simd.pack)."""
+    wp = wp.astype(jnp.int32)
+    lo = wp & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)        # sign-extend nibble
+    hi = (wp >> 4) & 0xF
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    bk, bn2 = wp.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(bk, bn2 * 2)
 
 
 def _gemm_kernel(x_ref, w_ref, o_ref):
@@ -43,15 +74,31 @@ def _gemm_kernel_packed4(x_ref, wp_ref, o_ref):
     def _():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    wp = wp_ref[...].astype(jnp.int32)         # [bk, bn//2]
-    lo = wp & 0xF
-    lo = jnp.where(lo >= 8, lo - 16, lo)        # sign-extend nibble
-    hi = (wp >> 4) & 0xF
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    bk, bn2 = wp.shape
-    w = jnp.stack([lo, hi], axis=-1).reshape(bk, bn2 * 2)
+    w = _unpack_nibbles(wp_ref[...])
     o_ref[...] += jnp.dot(x_ref[...].astype(jnp.int32), w,
                           preferred_element_type=jnp.int32)
+
+
+def _gemm_kernel_fused(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, packed,
+                       af, hr, lv):
+    """Output-stationary code GEMM with dequant(+AF) epilogue at k == nk-1."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _unpack_nibbles(w_ref[...]) if packed else w_ref[...]
+    acc_t = acc_ref.dtype
+    acc_ref[...] += jnp.dot(x_ref[...].astype(acc_t), w.astype(acc_t),
+                            preferred_element_type=acc_t)
+
+    @pl.when(k == nk - 1)
+    def _():
+        out = acc_ref[...].astype(jnp.float32) * s_ref[...]
+        if af is not None:
+            out = _af_block(out, af, hr, lv, True)
+        o_ref[...] = out
 
 
 def fxp_gemm_pallas(x_codes: jax.Array, w_codes: jax.Array,
@@ -91,3 +138,49 @@ def fxp4_gemm_packed_pallas(x_codes: jax.Array, w_packed: jax.Array,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(x_codes.astype(jnp.int8), w_packed.astype(jnp.int8))
+
+
+def fxp_gemm_fused_pallas(x_codes: jax.Array, w_codes: jax.Array,
+                          scale: jax.Array, *, packed: bool = False,
+                          af: str | None = None, hr_stages: int = 4,
+                          lv_stages: int = 5, blocks=DEFAULT_BLOCKS,
+                          interpret: bool = False):
+    """Code GEMM with fused dequant(+AF) epilogue — one kernel launch.
+
+    x_codes: int[M,K]; w_codes: int[K,N] codes, or packed-nibble int8
+    [K, N//2] when packed=True. scale: f32[1,N] (per-output-channel dequant
+    scale, activation scale folded in). Returns f32[M,N] = AF(acc * scale).
+    """
+    assert af is None or af in FUSED_AFS, af
+    m, k = x_codes.shape
+    k2, nw = w_codes.shape
+    assert k == k2
+    n = nw * 2 if packed else nw
+    assert scale.shape == (1, n), (scale.shape, n)
+    bm, bn, bk = (min(b, d) for b, d in zip(blocks, (m, n, k)))
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert not packed or bn % 2 == 0
+    # exact int32 accumulation only when BOTH operands are <=8-bit codes
+    # (packed nibbles count: the bytes hold 4-bit lanes) — wider codes
+    # would overflow int32 partial sums, so they take the f32 accumulator
+    def _narrow(dt, is_packed=False):
+        return jnp.issubdtype(dt, jnp.integer) and (dt.itemsize == 1
+                                                    or is_packed)
+    exact = _narrow(x_codes.dtype) and _narrow(w_codes.dtype, packed)
+    acc_dtype = jnp.int32 if exact else jnp.float32
+    nk = k // bk
+    kern = functools.partial(_gemm_kernel_fused, nk=nk, packed=packed,
+                             af=af, hr=hr_stages, lv=lv_stages)
+    w_spec = (pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j)) if packed
+              else pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  w_spec,
+                  pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=interpret,
+    )(x_codes, w_codes, scale.astype(jnp.float32))

@@ -9,11 +9,42 @@ bandwidth lives — the standard >=2-pod layout.
 """
 from __future__ import annotations
 
+import enum
+import functools
+import inspect
 import math
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
+
+
+def _install_axis_type_compat() -> None:
+    """Version-guarded fallback for JAX < 0.5: `jax.sharding.AxisType` and
+    the `jax.make_mesh(..., axis_types=...)` kwarg don't exist in 0.4.x.
+    Install a no-op stand-in so explicit-sharding-typed call sites (here and
+    in tests) degrade to plain auto meshes — semantically identical, since
+    Auto is the 0.4.x default behaviour."""
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+    orig = jax.make_mesh
+    if "axis_types" not in inspect.signature(orig).parameters:
+        @functools.wraps(orig)
+        def make_mesh(*args, axis_types=None, **kwargs):
+            del axis_types  # 0.4.x meshes are always Auto
+            return orig(*args, **kwargs)
+
+        jax.make_mesh = make_mesh
+
+
+_install_axis_type_compat()
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -12,6 +12,11 @@ memory-efficient attention schedule on TPU.
 
 KV caches support FxP8 quantized storage (policy.kv_cache) — int8 codes +
 per-(batch,head) scales, halving cache HBM and its decode roofline term.
+
+Matmul weights may be plain float arrays or `core.qtensor.QuantizedTensor`
+leaves (quantize-once packed serving storage, produced by
+`core.qtensor.quantize_params`); `qmatmul` accepts both on every backend,
+so the same layer code serves training and packed-weight inference.
 """
 from __future__ import annotations
 
@@ -337,15 +342,22 @@ def mlp_axes(act):
 
 
 def mlp(p, x, act, policy=None):
-    h = qmatmul(x, p["w1"], policy)
+    """FFN with the Flex-PE MAC→AF pipeline: under a policy, the activation
+    is passed to qmatmul as a fused epilogue (one kernel launch on the
+    pallas backend; `policy.act` post-op on reference)."""
     if "w3" in p:  # SwiGLU
-        gate = policy.act(h, "silu") if policy else jax.nn.silu(h)
+        if policy:
+            gate = qmatmul(x, p["w1"], policy, af="silu")
+        else:
+            gate = jax.nn.silu(qmatmul(x, p["w1"], policy))
         h = gate * qmatmul(x, p["w3"], policy)
     else:
         if policy:
-            h = policy.act(h, act if act in ("gelu", "relu", "tanh",
-                                             "sigmoid") else "gelu")
+            h = qmatmul(x, p["w1"], policy,
+                        af=act if act in ("gelu", "relu", "tanh",
+                                          "sigmoid") else "gelu")
         else:
             h = {"gelu": jax.nn.gelu, "relu": jax.nn.relu,
-                 "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid}[act](h)
+                 "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid}[act](
+                     qmatmul(x, p["w1"], policy))
     return qmatmul(h, p["w2"], policy)

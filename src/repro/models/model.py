@@ -10,6 +10,13 @@ Layer stacks run under jax.lax.scan with remat (per-layer activation
 checkpointing): compile time and HLO size are depth-independent, and the
 backward pass recomputes block activations instead of storing them —
 mandatory at train_4k production sizes.
+
+Serving accepts quantize-once params: `core.qtensor.quantize_params`
+replaces matmul-weight leaves with QuantizedTensor (codes + per-channel
+scale, same leading layer axis), which slice through the block scans like
+any other leaf and hit the packed-int Pallas kernels when
+`policy.backend` is 'pallas'/'pallas-interpret'/'auto'. Embeddings (gather
+path, possibly tied to the LM head) stay float.
 """
 from __future__ import annotations
 
