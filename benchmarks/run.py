@@ -7,6 +7,7 @@
   bench_accuracy     Fig. 5 (<2% accuracy with CORDIC MAC+SST)
   bench_roofline     EXPERIMENTS.md §Roofline (from dry-run artifacts)
   bench_backend      reference vs pallas GEMM + packed weight bytes-moved
+  bench_serving      continuous batching vs static batch (tok/s, slot util)
 
 Prints ``name,us_per_call,derived`` CSV at the end.
 """
@@ -18,10 +19,12 @@ import traceback
 
 def main() -> None:
     from . import (bench_accuracy, bench_af_error, bench_backend, bench_dma,
-                   bench_roofline, bench_systolic, bench_throughput)
+                   bench_roofline, bench_serving, bench_systolic,
+                   bench_throughput)
     rows = []
     for mod in (bench_af_error, bench_throughput, bench_dma, bench_systolic,
-                bench_accuracy, bench_roofline, bench_backend):
+                bench_accuracy, bench_roofline, bench_backend,
+                bench_serving):
         print(f"\n==== {mod.__name__} ====")
         try:
             mod.run(rows)

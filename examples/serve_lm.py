@@ -1,21 +1,61 @@
-"""Batched serving example: prefill + decode with the Flex-PE FxP8 policy
-(quantized matmuls, CORDIC attention softmax, FxP8-quantized KV cache).
+"""Continuous-batching serving example: submit requests with different
+prompt lengths and sampling params to the engine, stream completions as
+slots free up (Flex-PE FxP8 policy: quantized matmuls, CORDIC attention
+softmax, FxP8-quantized KV cache).
 
     PYTHONPATH=src python examples/serve_lm.py
     PYTHONPATH=src python examples/serve_lm.py --arch mamba2_370m --gen 32
+    PYTHONPATH=src python examples/serve_lm.py --backend pallas
 """
-import sys
+import argparse
 
-from repro.launch import serve as S
+import jax
+
+from repro.configs import get_config
+from repro.launch.serve import prepare_serving_params
+from repro.launch.train import policy_from_name
+from repro.models import model as M
+from repro.serving import Request, SamplingParams, ServingEngine
 
 
 def main():
-    argv = sys.argv[1:]
-    if not any(a.startswith("--arch") for a in argv):
-        argv = ["--arch", "qwen2_5_14b"] + argv
-    argv += ["--reduced", "--batch", "4", "--prompt-len", "16", "--gen", "12",
-             "--policy", "flexpe-fxp8"]
-    S.main(argv)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_5_14b")
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--backend", default="reference")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    policy = policy_from_name("flexpe-fxp8").with_backend(args.backend)
+    params = prepare_serving_params(
+        M.init_params(cfg, jax.random.PRNGKey(0)), policy)
+
+    engine = ServingEngine(cfg, params, policy=policy, max_slots=3,
+                           max_len=64, prefill_chunk=8)
+
+    # six requests with heterogeneous prompt lengths and per-request
+    # sampling — only three slots, so admission happens mid-decode
+    for i, plen in enumerate((17, 5, 11, 3, 23, 8)):
+        prompt = jax.random.randint(
+            jax.random.fold_in(jax.random.PRNGKey(1), i), (plen,), 0,
+            cfg.vocab)
+        sampling = (SamplingParams()
+                    if i % 2 == 0 else
+                    SamplingParams(temperature=0.7, top_k=20))
+        engine.submit(Request(prompt=prompt, max_new_tokens=args.gen,
+                              sampling=sampling, seed=i))
+
+    # events() streams FinishedRequest objects the moment each completes
+    for fin in engine.events():
+        mode = "greedy" if fin.id % 2 == 0 else "top-k sampled"
+        print(f"req {fin.id:2d} [{mode:13s}] prompt={fin.prompt_len:2d} "
+              f"ticks {fin.admitted_tick:3d}-{fin.finished_tick:3d} "
+              f"-> {fin.tokens}")
+
+    st = engine.stats()
+    print(f"done: {st['prompt_tokens']} prompt + {st['generated_tokens']} "
+          f"generated tokens over {st['ticks']} ticks, "
+          f"slot utilization {st['slot_utilization']:.0%}")
 
 
 if __name__ == "__main__":

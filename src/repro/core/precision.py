@@ -171,9 +171,23 @@ def qmatmul(x: jax.Array, w, policy: Optional[PrecisionPolicy],
         preferred_element_type=preferred).astype(x.dtype)
 
 
+#: MoE expert-bank einsums ("gecd,edf->gecf" family): batched per-expert
+#: GEMMs with the contraction on x's last / w's middle axis — the shape
+#: `kernels.dispatch.expert_matmul` serves on every backend.
+_EXPERT_BANK_SPECS = frozenset({"gecd,edf->gecf", "gecf,efd->gecd"})
+
+
 def qeinsum(spec: str, x: jax.Array, w, policy: Optional[PrecisionPolicy]):
-    """Einsum sibling of qmatmul. Reference-only (MoE expert banks): a
-    QuantizedTensor operand is materialised back to float first."""
+    """Einsum sibling of qmatmul.
+
+    MoE expert-bank specs with a pallas backend or a QuantizedTensor bank
+    dispatch through `kernels.dispatch.expert_matmul` (per-expert packed-int
+    GEMMs, same exact-int contract as qmatmul). Anything else is the
+    fake-quant reference einsum."""
+    be = _resolve_backend(policy.backend if policy is not None else None)
+    if spec in _EXPERT_BANK_SPECS and (_is_pallas(be)
+                                       or isinstance(w, QuantizedTensor)):
+        return _dispatch().expert_matmul(x, w, policy, backend=be)
     if isinstance(w, QuantizedTensor):
         w = w.dequantize(x.dtype)
     if policy is not None and policy.matmul is not None:

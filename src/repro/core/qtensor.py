@@ -128,10 +128,10 @@ def quantize_tensor(w: jax.Array, fmt_name: str, packed: Optional[bool] = None,
 
 
 def _is_weight_leaf(v: Any) -> bool:
-    # 2-D ([K, N]) or scan-stacked 3-D ([L, K, N]) matmul weights only.
-    # 4-D leaves (stacked MoE expert banks [L, E, K, N], consumed by
-    # qeinsum) stay float — the einsum path is reference-only.
-    return (isinstance(v, jax.Array) and v.ndim in (2, 3)
+    # 2-D ([K, N]), scan-stacked 3-D ([L, K, N]), or stacked MoE expert
+    # banks 4-D ([L, E, K, N] — per-(layer, expert, channel) scales,
+    # consumed per-expert by `kernels.dispatch.expert_matmul`).
+    return (isinstance(v, jax.Array) and v.ndim in (2, 3, 4)
             and jnp.issubdtype(v.dtype, jnp.floating))
 
 

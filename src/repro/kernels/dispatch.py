@@ -34,7 +34,7 @@ from .fxp_gemm.fxp_gemm import FUSED_AFS, fxp_gemm_fused_pallas
 from .fxp_gemm.ops import pad_to, round_up
 
 __all__ = ["register", "lookup", "matmul", "act", "softmax",
-           "supports_fused_af", "PALLAS_AFS"]
+           "expert_matmul", "supports_fused_af", "PALLAS_AFS"]
 
 #: AFs the pallas act/epilogue path implements (Sel_AF minus softmax, which
 #: is a row-reduction kernel of its own).
@@ -158,8 +158,7 @@ def _matmul_pallas(x, w, policy, af=None, interpret=False):
     # shared accumulator-AF contract as a post-op
     fuse_af = (af is not None and af in PALLAS_AFS
                and (policy is None or policy.af_impl == "cordic"))
-    x_fmt = FORMATS[policy.matmul] if (policy is not None
-                                       and policy.matmul) else FORMATS[fmt_name]
+    x_fmt = _x_fmt(fmt_name, policy)
 
     orig_dtype = x.dtype
     *lead, kdim = x.shape
@@ -259,6 +258,33 @@ def _softmax_pallas(x, policy, axis=-1, interpret=False):
 def matmul(x, w, policy, backend: str, af: Optional[str] = None):
     fn, interp = lookup("matmul", backend)
     return fn(x, w, policy, af=af, interpret=interp)
+
+
+def expert_matmul(x, w, policy, backend: str, af: Optional[str] = None):
+    """MoE expert-bank GEMM: x [..., E, C, K] @ w [E, K, N] -> [..., E, C, N].
+
+    Unrolls over the (static) expert axis, feeding each expert's token
+    queue through the same per-backend matmul impl as every other matmul —
+    so `--backend pallas` covers MoE decode, and reference/pallas share the
+    exact-integer contract on QuantizedTensor expert banks (bit-identical
+    ≤8-bit results, like the dense path). `w` is a float bank or a 3-D
+    QuantizedTensor (a scan slice of the quantized [L, E, K, N] bank)."""
+    fn, interp = lookup("matmul", backend)
+    if isinstance(w, QuantizedTensor):
+        e = w.data.shape[0]
+        experts = [QuantizedTensor(w.data[i], w.scale[i], w.fmt_name, w.n,
+                                   w.packed) for i in range(e)]
+        n = w.n
+    else:
+        e = w.shape[0]
+        experts = [w[i] for i in range(e)]
+        n = w.shape[-1]
+    *lead, e_x, c, k = x.shape
+    assert e_x == e, (x.shape, e)
+    xe = jnp.moveaxis(x, -3, 0).reshape(e, -1, k)
+    out = jnp.stack([fn(xe[i], experts[i], policy, af=af, interpret=interp)
+                     for i in range(e)])
+    return jnp.moveaxis(out.reshape((e,) + tuple(lead) + (c, n)), 0, -3)
 
 
 def act(x, af: str, policy, backend: str):

@@ -124,7 +124,8 @@ def dryrun_cell(arch: str, shape: str, *, multi_pod: bool = False,
                 cfg, mesh, policy, fsdp=fsdp_eff, shape_name=shape)
             lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                               donate_argnums=(1,)).lower(
-                specs["params"], specs["cache"], specs["tokens"])
+                specs["params"], specs["cache"], specs["tokens"],
+                specs["n_valid"])
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -187,7 +188,8 @@ def dryrun_cell(arch: str, shape: str, *, multi_pod: bool = False,
                         cfg_x, mesh, policy, fsdp=fsdp_eff, shape_name=shape)
                     c2 = jax.jit(fn2, in_shardings=ish2, out_shardings=osh2,
                                  donate_argnums=(1,)).lower(
-                        sp2["params"], sp2["cache"], sp2["tokens"]).compile()
+                        sp2["params"], sp2["cache"], sp2["tokens"],
+                        sp2["n_valid"]).compile()
         finally:
             M.SCAN_UNROLL = False
         ca2 = c2.cost_analysis()

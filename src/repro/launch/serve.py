@@ -1,22 +1,23 @@
-"""Serving launcher — batched prefill + decode with KV cache.
+"""Serving launcher — thin CLI over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_14b --reduced \
-        --batch 4 --prompt-len 32 --gen 16 --policy flexpe-fxp8 \
-        --backend pallas
+        --requests 8 --slots 4 --prompt-len 32 --mixed --gen 16 \
+        --policy flexpe-fxp8 --backend pallas
 
-Continuous-batching-style driver: a batch of requests is prefetched through
-`prefill` (chunked attention, last-token logits), then stepped through the
-jitted `decode` loop with greedy/temperature sampling. The Flex-PE policy
+Builds a `serving.ServingEngine` (slot pool + ragged per-request KV cache),
+submits `--requests` generation requests — with heterogeneous prompt
+lengths under `--mixed` — and streams completions. Prefill is chunked
+(`--prefill-chunk` tokens per jitted call, bulk KV write); decode admits
+pending requests into slots the moment one finishes. The Flex-PE policy
 applies end-to-end: quantized matmuls, CORDIC attention softmax, FxP8
 quantized KV cache storage.
 
 `--backend` selects the kernel backend (see core/backend.py):
 reference (fake-quant float path), pallas (real packed-int fxp_gemm +
-CORDIC kernels; on CPU this resolves to interpret mode via 'auto'-style
-fallback inside the kernels), pallas-interpret, or auto. Any non-reference
-backend first runs `quantize_params` model surgery, so decode moves packed
-integer weight codes HBM→VMEM instead of re-fake-quantizing bf16 weights
-every step — the paper's SIMD storage win at serving time.
+CORDIC kernels), pallas-interpret, or auto. Any non-reference backend
+first runs `quantize_params` model surgery, so decode moves packed integer
+weight codes HBM→VMEM instead of re-fake-quantizing bf16 weights every
+step — the paper's SIMD storage win at serving time.
 """
 from __future__ import annotations
 
@@ -30,6 +31,7 @@ from ..configs.base import ARCH_IDS, get_config
 from ..core.backend import BACKENDS
 from ..core.qtensor import packed_bytes, quantize_params
 from ..models import model as M
+from ..serving import Request, SamplingParams, ServingEngine
 from .mesh import make_host_mesh
 from .train import policy_from_name
 
@@ -43,53 +45,43 @@ def prepare_serving_params(params, policy, packed=None):
     return quantize_params(params, policy.matmul, packed=packed)
 
 
-def generate(cfg, params, prompts, max_new: int, policy=None, temp=0.0,
-             seed=0):
-    """prompts: [B, P] tokens (or [B,P,D] embeds). Returns [B, max_new]."""
-    b = prompts.shape[0]
-    plen = prompts.shape[1]
-    cache = M.init_cache(cfg, b, plen + max_new, policy)
-
-    decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t,
-                                                   policy=policy))
-    # prefill token-by-token through the decode path (cache-exact); a
-    # production server uses build_prefill_step + cache bulk-write instead.
-    tok = None
-    for i in range(plen):
-        tok = prompts[:, i:i + 1]
-        logits, cache = decode(params, cache, tok)
-    out = []
-    key = jax.random.PRNGKey(seed)
-    for i in range(max_new):
-        logits = logits[:, -1, : cfg.vocab]
-        if temp > 0:
-            key, k = jax.random.split(key)
-            nxt = jax.random.categorical(k, logits / temp, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        nxt = nxt[:, None]
-        out.append(nxt)
+def make_requests(cfg, n, prompt_len, gen, mixed=False, temp=0.0, top_k=0,
+                  seed=0):
+    """n requests; `mixed` varies prompt lengths across [plen/2, plen]."""
+    reqs = []
+    for i in range(n):
+        plen = max(1, prompt_len - (i % 4) * (prompt_len // 8)) if mixed \
+            else prompt_len
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), i)
         if cfg.input_mode == "tokens":
-            logits, cache = decode(params, cache, nxt.astype(jnp.int32))
-        else:  # embeds-mode stubs feed the embedding of the sampled token
-            emb = jax.nn.one_hot(nxt, cfg.d_model, dtype=jnp.bfloat16)
-            logits, cache = decode(params, cache, emb)
-    return jnp.concatenate(out, axis=1)
+            prompt = jax.random.randint(key, (plen,), 0, cfg.vocab)
+        else:
+            prompt = jax.random.normal(key, (plen, cfg.d_model), jnp.bfloat16)
+        reqs.append(Request(prompt=prompt, max_new_tokens=gen,
+                            sampling=SamplingParams(temperature=temp,
+                                                    top_k=top_k)))
+    return reqs
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slot pool size (max concurrent requests)")
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--mixed", action="store_true",
+                    help="heterogeneous prompt lengths across requests")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--policy", default="flexpe-fxp8")
     ap.add_argument("--backend", default="reference", choices=list(BACKENDS),
                     help="kernel backend for qmatmul/act/softmax; any "
                          "non-reference choice serves quantize-once packed "
                          "weights through the Pallas kernels")
     ap.add_argument("--temp", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -110,23 +102,31 @@ def main(argv=None):
             print(f"quantized weights: {qb / 2**20:.1f} MiB moved per "
                   f"full pass vs {fb / 2**20:.1f} MiB fp32 "
                   f"({fb / max(qb, 1):.1f}x reduction)")
-        if cfg.input_mode == "tokens":
-            prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                         (args.batch, args.prompt_len), 0,
-                                         cfg.vocab)
-        else:
-            prompts = jax.random.normal(
-                jax.random.PRNGKey(1),
-                (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16)
+        engine = ServingEngine(
+            cfg, params, policy=policy, max_slots=args.slots,
+            max_len=args.prompt_len + args.gen,
+            prefill_chunk=args.prefill_chunk, seed=args.seed, mesh=mesh)
+        reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
+                             mixed=args.mixed, temp=args.temp,
+                             top_k=args.top_k, seed=args.seed)
         t0 = time.time()
-        toks = generate(cfg, params, prompts, args.gen, policy=policy,
-                        temp=args.temp, seed=args.seed)
+        for r in reqs:
+            engine.submit(r)
+        finished = []
+        for fin in engine.events():   # stream completions as slots drain
+            print(f"  req {fin.id} done ({fin.finish_reason}) "
+                  f"prompt={fin.prompt_len} toks={fin.tokens[:8]}"
+                  f"{'...' if len(fin.tokens) > 8 else ''} "
+                  f"[ticks {fin.admitted_tick}-{fin.finished_tick}]")
+            finished.append(fin)
         dt = time.time() - t0
-    print("generated:", toks[:, :12].tolist())
-    total = args.batch * (args.prompt_len + args.gen)
-    print(f"{total} tokens in {dt:.2f}s = {total / dt:.1f} tok/s "
+    st = engine.stats()
+    total = st["prompt_tokens"] + st["generated_tokens"]
+    print(f"{len(finished)} requests, {total} tokens in {dt:.2f}s = "
+          f"{total / dt:.1f} tok/s, slot utilization "
+          f"{st['slot_utilization']:.0%} "
           f"(policy {args.policy}, backend {args.backend}, arch {cfg.name})")
-    return toks
+    return finished
 
 
 if __name__ == "__main__":

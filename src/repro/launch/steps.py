@@ -28,8 +28,15 @@ from ..optim import adamw
 # ---------------------------------------------------------------------------
 
 
-def input_specs(cfg: ModelConfig, shape_name: str, policy=None):
-    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+def input_specs(cfg: ModelConfig, shape_name: str, policy=None,
+                batch=None, max_len=None, chunk=1):
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell.
+
+    For decode cells, `batch`/`max_len` override the registry shape (the
+    serving engine's slot pool / cache allocation) and `chunk` is the token
+    block width per step — 1 for plain decode, the prefill-chunk size for
+    chunked-prefill steps. `n_valid` [B] is the ragged per-row valid-token
+    count fed alongside the block."""
     spec = SHAPES[shape_name]
     b, s = spec["global_batch"], spec["seq_len"]
     sd = jax.ShapeDtypeStruct
@@ -46,12 +53,14 @@ def input_specs(cfg: ModelConfig, shape_name: str, policy=None):
         if cfg.input_mode == "tokens":
             return {"batch": {"tokens": sd((b, s), jnp.int32)}}
         return {"batch": {"embeds": sd((b, s, cfg.d_model), jnp.bfloat16)}}
-    # decode: one new token against a seq_len cache
+    # decode: a [B, chunk] token block against a max_len cache
+    b = batch if batch is not None else b
+    s = max_len if max_len is not None else s
     cache = jax.eval_shape(
         lambda: M.init_cache(cfg, b, s, policy))
-    tok = (sd((b, 1), jnp.int32) if cfg.input_mode == "tokens"
-           else sd((b, 1, cfg.d_model), jnp.bfloat16))
-    return {"cache": cache, "tokens": tok}
+    tok = (sd((b, chunk), jnp.int32) if cfg.input_mode == "tokens"
+           else sd((b, chunk, cfg.d_model), jnp.bfloat16))
+    return {"cache": cache, "tokens": tok, "n_valid": sd((b,), jnp.int32)}
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +219,42 @@ def build_train_step(cfg: ModelConfig, mesh, policy: Optional[PrecisionPolicy],
 
 
 def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
-                       shape_name: str = "prefill_32k"):
+                       shape_name: str = "prefill_32k",
+                       with_cache: bool = False, batch=None, max_len=None,
+                       chunk=None):
+    """Cache-less full-prompt prefill (forward last_only — dry-run cost
+    cells), or, `with_cache=True`, the serving engine's chunked prefill:
+    a [1, chunk] token block run against ONE slot's cache row (sliced out
+    of the [batch]-row pool by traced `slot` index) — one jitted call
+    bulk-writes a chunk of a request's prompt into its slot and returns
+    last-valid logits. Prefill cost therefore scales with the prompt being
+    admitted, not with the slot-pool width."""
+    if with_cache:
+        rules = MeshRules(mesh, fsdp=fsdp)
+        params_specs = model_state_specs(cfg, with_opt=False)
+        p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
+        specs = input_specs(cfg, "decode_32k", policy, batch=batch,
+                            max_len=max_len, chunk=chunk or 1)
+        specs["params"] = params_specs
+        sd = jax.ShapeDtypeStruct
+        specs["tokens"] = sd((1,) + specs["tokens"].shape[1:],
+                             specs["tokens"].dtype)
+        specs["n_valid"] = sd((1,), jnp.int32)
+        specs["slot"] = sd((), jnp.int32)
+
+        def prefill_step(params, cache, tokens, n_valid, slot):
+            sub = M.slice_cache_rows(cache, slot, 1)
+            logits, new_sub = M.decode_step(cfg, params, sub, tokens,
+                                            policy=policy, n_valid=n_valid,
+                                            last_only=True)
+            return logits[:, -1, :], M.update_cache_rows(cache, new_sub, slot)
+
+        b = batch if batch is not None else SHAPES["decode_32k"]["global_batch"]
+        c_shard = cache_shardings(cfg, rules, specs["cache"], b)
+        rep = NamedSharding(mesh, P())
+        out_shardings = (NamedSharding(mesh, P(None, "model")), c_shard)
+        return prefill_step, p_shard, specs, \
+            (p_shard, c_shard, rep, rep, rep), out_shardings
     rules = MeshRules(mesh, fsdp=fsdp)
     params_specs = model_state_specs(cfg, with_opt=False)
     p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
@@ -230,22 +274,30 @@ def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
 
 
 def build_serve_step(cfg, mesh, policy, fsdp: bool = False,
-                     shape_name: str = "decode_32k"):
+                     shape_name: str = "decode_32k", batch=None,
+                     max_len=None, chunk=1):
+    """The ragged serving step: tokens [B, chunk] + n_valid [B] against the
+    slot-pool cache. chunk=1 is plain decode; chunk>1 is the engine's
+    chunked prefill (same step, wider block). Returns last-valid-position
+    logits [B, V] (lm_head never sees [B, chunk, V])."""
     rules = MeshRules(mesh, fsdp=fsdp)
     params_specs = model_state_specs(cfg, with_opt=False)
     p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
-    specs = input_specs(cfg, shape_name, policy)
+    specs = input_specs(cfg, shape_name, policy, batch=batch,
+                        max_len=max_len, chunk=chunk)
     specs["params"] = params_specs
     b = specs["tokens"].shape[0]
     c_shard = cache_shardings(cfg, rules, specs["cache"], b)
     t_shard = batch_shardings(rules, specs["tokens"], b)
+    n_shard = NamedSharding(mesh, P(_dp_or_none(rules, b)))
     dp = _dp_or_none(rules, b)
 
-    def serve_step(params, cache, tokens):
+    def serve_step(params, cache, tokens, n_valid):
         logits, new_cache = M.decode_step(cfg, params, cache, tokens,
-                                          policy=policy, shard=rules)
-        return logits, new_cache
+                                          policy=policy, shard=rules,
+                                          n_valid=n_valid, last_only=True)
+        return logits[:, -1, :], new_cache
 
-    out_shardings = (NamedSharding(mesh, P(dp, None, "model")), c_shard)
-    return serve_step, p_shard, specs, (p_shard, c_shard, t_shard), \
+    out_shardings = (NamedSharding(mesh, P(dp, "model")), c_shard)
+    return serve_step, p_shard, specs, (p_shard, c_shard, t_shard, n_shard), \
         out_shardings

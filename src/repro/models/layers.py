@@ -128,15 +128,20 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
 
     Query-block scan with online softmax; scores never exceed
     [B, chunk, H, Skv] live. GQA via head-group reshape. `q_offset` is the
-    absolute position of q[0] (prefill continuation / decode). When
-    `kv_valid_len` is set, keys at positions >= kv_valid_len are masked
-    (decode with a pre-allocated cache).
+    absolute position of q[0] — a scalar, or a per-request [B] vector
+    (ragged decode/prefill continuation: each batch row continues from its
+    own cache length). When `kv_valid_len` is set (scalar or [B]), keys at
+    positions >= kv_valid_len are masked (decode with a pre-allocated
+    cache whose tail holds stale entries).
     """
     b, sq, h, hd = q.shape
     _, skv, kvh, _ = k.shape
     g = h // kvh
     scale = 1.0 / math.sqrt(hd)
     expf = _exp_fn(policy)
+    qoff = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    kvv = (None if kv_valid_len is None else
+           jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (b,)))
 
     nq = max(1, sq // chunk)
     while sq % nq:
@@ -154,12 +159,12 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
                        kg.astype(jnp.float32)) * scale
         s = s.reshape(b, qc, h, skv)
         if causal:
-            qpos = q_offset + idx * qc + jnp.arange(qc)
-            mask = kv_pos[None, :] <= qpos[:, None]
-            s = jnp.where(mask[None, :, None, :], s, -1e30)
-        if kv_valid_len is not None:
-            vmask = kv_pos < kv_valid_len
-            s = jnp.where(vmask[None, None, None, :], s, -1e30)
+            qpos = qoff[:, None] + idx * qc + jnp.arange(qc)[None, :]
+            mask = kv_pos[None, None, :] <= qpos[:, :, None]   # [B,qc,Skv]
+            s = jnp.where(mask[:, :, None, :], s, -1e30)
+        if kvv is not None:
+            vmask = kv_pos[None, :] < kvv[:, None]             # [B,Skv]
+            s = jnp.where(vmask[:, None, None, :], s, -1e30)
         m = jnp.max(s, axis=-1, keepdims=True)
         p = expf(s - m)                                  # [B,qc,H,Skv]
         denom = jnp.sum(p, axis=-1)                      # [B,qc,H]
@@ -174,15 +179,19 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
 
 
 def int8_decode_attention(q, k_codes, v_codes, k_scale, v_scale, fmt,
-                          policy, kv_valid_len):
+                          policy, positions, kv_valid_len):
     """Decode attention computed on integer KV codes (Flex-PE FxP MAC):
 
       scores = (q_codes @ k_codes^T) * (sq * k_scale)   int8 x int8 -> int32
       out    = (p_codes @ v_codes)   * (sp * v_scale)   int8 x int8 -> int32
 
-    q: [B,1,H,hd] float; k/v codes: [B,S,KV,hd] int8 with per-(pos,head)
-    scales [B,S,KV,1]. No bf16 cache copy is materialised: HBM traffic for
-    the cache is its int8 codes (the SIMD storage win during decode).
+    q: [B,Sq,H,hd] float; k/v codes: [B,S,KV,hd] int8 with per-(pos,head)
+    scales [B,S,KV,1]. `positions` [B,Sq] are the queries' absolute cache
+    positions and `kv_valid_len` [B] the per-request valid cache length —
+    keys above either bound (future tokens inside a prefill chunk, stale
+    tail entries) are masked per row. No bf16 cache copy is materialised:
+    HBM traffic for the cache is its int8 codes (the SIMD storage win
+    during decode).
     """
     b, sq_, h, hd = q.shape
     _, skv, kvh, _ = k_codes.shape
@@ -194,8 +203,11 @@ def int8_decode_attention(q, k_codes, v_codes, k_scale, v_scale, fmt,
                        k_codes.astype(jnp.int32))
     ks = k_scale.transpose(0, 3, 2, 1).reshape(b, 1, kvh, 1, skv)
     s = s_int.astype(jnp.float32) * sq.reshape(b, sq_, kvh, g, 1) * ks
-    mask = jnp.arange(skv) < kv_valid_len
-    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    kv_pos = jnp.arange(skv)
+    kvv = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (b,))
+    mask = ((kv_pos[None, None, :] <= positions[:, :, None])
+            & (kv_pos[None, None, :] < kvv[:, None, None]))    # [B,Sq,Skv]
+    s = jnp.where(mask[:, :, None, None, :], s, -1e30)
     p = policy.softmax(s, axis=-1) if policy else jax.nn.softmax(s, axis=-1)
     # fold per-position v scales into the softmax weights, requantize the
     # weighted probs to int8 (the paper's FxP attention weights), int-dot
@@ -237,13 +249,41 @@ def attn_axes(cfg):
     return ax
 
 
+def ragged_cache_update(buf, new, start, count):
+    """Per-request cache write: buf[b, start[b]:start[b]+count[b]] <-
+    new[b, :count[b]], every other position of buf untouched.
+
+    buf: [B, Smax, ...]; new: [B, S, ...]; start/count: [B] int32. The write
+    is a vmapped read-modify-write window: positions >= count[b] inside the
+    window are rewritten with their current content, so rows with
+    count[b]=0 (idle slots) are exact no-ops — even when XLA clamps an
+    out-of-range start, the clamped window is read and written back
+    unchanged. Rows with count[b] > 0 need start[b] + S <= Smax (the
+    serving engine over-allocates the cache by one chunk to guarantee it).
+    """
+    s = new.shape[1]
+
+    def row(buf_b, new_b, st, ct):
+        cur = jax.lax.dynamic_slice_in_dim(buf_b, st, s, axis=0)
+        keep = (jnp.arange(s) < ct).reshape((s,) + (1,) * (new_b.ndim - 1))
+        upd = jnp.where(keep, new_b.astype(buf_b.dtype), cur)
+        return jax.lax.dynamic_update_slice_in_dim(buf_b, upd, st, axis=0)
+
+    return jax.vmap(row)(buf, new, start, count)
+
+
 def attention(p, x, cfg, *, positions, policy=None, cache=None,
-              layer_idx=None, cache_len=None):
+              lengths=None, n_valid=None):
     """Returns (out, new_cache_entry|None).
 
     Training/prefill: cache=None -> full chunked attention over x.
-    Decode: cache=(k,v[,scales]) pre-allocated [B,Smax,KV,hd]; x is the new
-    token block; cache_len = number of valid positions already stored.
+    Decode / chunked prefill: cache=(k,v,k_scale,v_scale) pre-allocated
+    [B,Smax,KV,hd]; x is the new token block [B,S,D]; `lengths` [B] is each
+    request's valid cache length (= write offset for its new tokens) and
+    `n_valid` [B] how many of this block's S tokens are real for that row
+    (ragged batches: rows prefill/decode/idle independently). The block is
+    causal relative to per-row absolute positions, so S > 1 serves chunked
+    prefill and S = 1 plain decode through the same code.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -264,20 +304,19 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
         new_cache = None
     else:
         kc, vc, k_scale, v_scale = cache
+        if n_valid is None:
+            n_valid = jnp.full((b,), s, jnp.int32)
+        kv_valid = lengths + n_valid                       # [B]
         kq_fmt = FORMATS[policy.kv_cache] if (policy and policy.kv_cache) else None
-        # write new k/v at position cache_len
+        # write each row's new k/v at its own cache length
         if kq_fmt is not None:
             # per-(position, head) scales: old codes keep their own scale
             k_codes, ks_new = quantize(k, kq_fmt, axis=3)
             v_codes, vs_new = quantize(v, kq_fmt, axis=3)
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                kc, k_codes.astype(kc.dtype), cache_len, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                vc, v_codes.astype(vc.dtype), cache_len, axis=1)
-            k_scale = jax.lax.dynamic_update_slice_in_dim(
-                k_scale, ks_new, cache_len, axis=1)
-            v_scale = jax.lax.dynamic_update_slice_in_dim(
-                v_scale, vs_new, cache_len, axis=1)
+            kc = ragged_cache_update(kc, k_codes, lengths, n_valid)
+            vc = ragged_cache_update(vc, v_codes, lengths, n_valid)
+            k_scale = ragged_cache_update(k_scale, ks_new, lengths, n_valid)
+            v_scale = ragged_cache_update(v_scale, vs_new, lengths, n_valid)
             if getattr(policy, "int_attention", False):
                 # fully-integer FxP attention (§Perf): score/AV dots run on
                 # int8 codes directly — no bf16 dequantized cache copy is
@@ -285,21 +324,19 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
                 # weights (the Flex-PE SIMD MAC applied to attention).
                 out = int8_decode_attention(
                     q, kc, vc, k_scale, v_scale, kq_fmt, policy,
-                    kv_valid_len=cache_len + s)
+                    positions=positions, kv_valid_len=kv_valid)
                 new_cache = (kc, vc, k_scale, v_scale)
                 out = out.reshape(b, s, h * hd)
                 return qmatmul(out, p["wo"], policy), new_cache
             k_full = dequantize(kc, k_scale, jnp.bfloat16)
             v_full = dequantize(vc, v_scale, jnp.bfloat16)
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
-                                                     cache_len, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
-                                                     cache_len, axis=1)
+            kc = ragged_cache_update(kc, k, lengths, n_valid)
+            vc = ragged_cache_update(vc, v, lengths, n_valid)
             k_full, v_full = kc, vc
-        out = chunked_attention(q, k_full, v_full, causal=False,
-                                q_offset=cache_len, policy=policy,
-                                kv_valid_len=cache_len + s)
+        out = chunked_attention(q, k_full, v_full, causal=True,
+                                q_offset=lengths, policy=policy,
+                                kv_valid_len=kv_valid)
         new_cache = (kc, vc, k_scale, v_scale)
 
     out = out.reshape(b, s, h * hd)

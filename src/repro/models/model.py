@@ -291,7 +291,11 @@ def loss_fn(cfg, params, batch, policy=None, shard=None, remat=True,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg, batch, max_len, policy=None, dtype=jnp.bfloat16):
-    """Serving cache for one decode stream set."""
+    """Serving cache for one decode stream set.
+
+    `cache["lengths"]` is a per-request [batch] int32 vector — every row
+    prefills, decodes, and finishes independently (ragged continuous
+    batching); there is no batch-wide position scalar."""
     cache = {}
     if cfg.family in ("dense", "moe", "vlm", "audio"):
         cache["kv"] = init_kv_cache(cfg, batch, max_len, policy, dtype=dtype)
@@ -307,20 +311,57 @@ def init_cache(cfg, batch, max_len, policy=None, dtype=jnp.bfloat16):
         n_apps = cfg.n_layers // cfg.attn_every
         cache["kv"] = init_kv_cache(cfg, batch, max_len, policy,
                                     n_layers=n_apps, dtype=dtype)
-    cache["len"] = jnp.zeros((), jnp.int32)
+    cache["lengths"] = jnp.zeros((batch,), jnp.int32)
     return cache
 
 
+def _cache_batch_axis(key: str) -> int:
+    # every family cache leaf is layer-stacked [L, B, ...] except the
+    # per-request length vector [B]
+    return 0 if key == "lengths" else 1
+
+
+def slice_cache_rows(cache, start, size: int = 1):
+    """Per-request cache window: rows [start, start+size) of every leaf's
+    batch axis (serving engine: run a step on one slot's row only)."""
+    return {k: jax.tree.map(
+        lambda a, ax=_cache_batch_axis(k): jax.lax.dynamic_slice_in_dim(
+            a, start, size, axis=ax), v)
+        for k, v in cache.items()}
+
+
+def update_cache_rows(cache, sub, start):
+    """Write a `slice_cache_rows` window back at row `start`."""
+    return {k: jax.tree.map(
+        lambda a, u, ax=_cache_batch_axis(k):
+        jax.lax.dynamic_update_slice_in_dim(a, u.astype(a.dtype), start,
+                                            axis=ax), v, sub[k])
+        for k, v in cache.items()}
+
+
 def decode_step(cfg, params, cache, tokens_or_embeds,
-                policy: Optional[PrecisionPolicy] = None, shard=None):
-    """One-token decode: tokens [B,1] (or embeds [B,1,D]) -> logits, cache'."""
+                policy: Optional[PrecisionPolicy] = None, shard=None,
+                n_valid=None, last_only: bool = False):
+    """Serving step: tokens [B,S] (or embeds [B,S,D]) -> logits, cache'.
+
+    S = 1 is plain decode; S > 1 is a chunked-prefill block (causal within
+    the block, bulk KV/state write) — both through the same code. Each
+    batch row continues from its own `cache["lengths"][b]`; `n_valid` [B]
+    says how many of the S tokens are real per row (defaults to all S), so
+    one call can mix rows that prefill a chunk, decode one token, or idle
+    (n_valid=0 rows leave their cache row bit-untouched). `last_only=True`
+    gathers each row's last *valid* position before the lm_head (serving:
+    avoids materialising [B,S,V])."""
     if cfg.input_mode == "tokens":
         x = params["embed"][tokens_or_embeds]
     else:
         x = tokens_or_embeds
     b, s = x.shape[0], x.shape[1]
-    clen = cache["len"]
-    positions = jnp.broadcast_to(clen, (b, s)).astype(jnp.int32)
+    lengths = cache["lengths"]
+    if n_valid is None:
+        n_valid = jnp.full((b,), s, jnp.int32)
+    n_valid = n_valid.astype(jnp.int32)
+    positions = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     new_cache = dict(cache)
 
     if cfg.family in ("dense", "moe", "vlm", "audio"):
@@ -331,7 +372,7 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             h, new_kv = attention(
                 bp["attn"], apply_norm(x, bp["attn_norm"], cfg.norm), cfg,
                 positions=positions, policy=policy,
-                cache=(kc, vc, ks, vs), cache_len=clen)
+                cache=(kc, vc, ks, vs), lengths=lengths, n_valid=n_valid)
             x = x + h
             xin = apply_norm(x, bp["mlp_norm"], cfg.norm)
             if cfg.family == "moe":
@@ -350,7 +391,7 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             bp, st, cv = xs
             h, (st2, cv2) = ssm_lib.mamba2_layer(
                 bp["ssm"], apply_norm(x, bp["ssm_norm"], cfg.norm), cfg,
-                policy, state=st, conv_state=cv)
+                policy, state=st, conv_state=cv, n_valid=n_valid)
             return x + h, (st2, cv2)
         x, new_ssm = _scan(body, x, (params["blocks"],) + cache["ssm"])
         new_cache["ssm"] = new_ssm
@@ -364,7 +405,7 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             bp, st, cv = xs
             h, (st2, cv2) = ssm_lib.mamba2_layer(
                 bp["ssm"], apply_norm(x, bp["ssm_norm"], cfg.norm), cfg,
-                policy, state=st, conv_state=cv)
+                policy, state=st, conv_state=cv, n_valid=n_valid)
             return (x + h, li + 1), (st2, cv2)
 
         # interleave: scan ssm blocks in groups, shared attn between groups
@@ -387,7 +428,7 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             h, new_kv = attention(
                 sp["attn"], apply_norm(xin, sp["attn_norm"], cfg.norm), cfg,
                 positions=positions, policy=policy, cache=kvq,
-                cache_len=clen)
+                lengths=lengths, n_valid=n_valid)
             x = x + h
             x = x + mlp(sp["mlp"], apply_norm(x, sp["mlp_norm"], cfg.norm),
                         cfg.act, policy)
@@ -410,7 +451,10 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
         raise ValueError(cfg.family)
 
     x = apply_norm(x, params["final_norm"], cfg.norm)
+    if last_only:
+        idx = jnp.clip(n_valid - 1, 0, s - 1)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # [B,1,D]
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = qmatmul(x, head, policy)
-    new_cache["len"] = clen + s
+    new_cache["lengths"] = lengths + n_valid
     return logits, new_cache

@@ -134,9 +134,16 @@ def ssd_chunked(xh, dt, A, B, C, cfg, init_state=None, chunk=128):
 
 
 def mamba2_layer(p, x, cfg, policy: Optional[PrecisionPolicy] = None,
-                 state=None, conv_state=None, chunk=128):
-    """x: [B,S,D]. Train/prefill when state is None; one-step decode when
-    state=(ssm_state [B,H,P,N], conv_state [B,cw-1,conv_ch])."""
+                 state=None, conv_state=None, chunk=128, n_valid=None):
+    """x: [B,S,D]. Train/prefill when state is None; stateful decode /
+    chunked-prefill continuation when state=(ssm_state [B,H,P,N],
+    conv_state [B,cw-1,conv_ch]) — any S >= 1.
+
+    `n_valid` [B] (stateful mode only) marks how many of the S tokens are
+    real per row (ragged serving batches). Invalid tokens get dt forced to
+    0, so their recurrence step is exactly the identity (decay exp(0)=1,
+    contribution dt·x⊗B=0) and the conv window is re-read per row at its
+    own valid offset — the carried state is bit-independent of padding."""
     b, s, d = x.shape
     di, n, g, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
     pdim = cfg.ssm_headdim
@@ -155,10 +162,22 @@ def mamba2_layer(p, x, cfg, policy: Optional[PrecisionPolicy] = None,
         xbc_c = jax.nn.silu(conv + p["conv_b"])
         new_conv_state = pad[:, -(cw - 1):] if cw > 1 else None
     else:
-        cat = jnp.concatenate([conv_state, xbc], axis=1)   # [B,cw,ch]
-        conv = jnp.einsum("bwc,wc->bc", cat, p["conv_w"])[:, None]
+        if n_valid is None:
+            n_valid = jnp.full((b,), s, jnp.int32)
+        # recurrence must skip invalid tokens exactly: dt=0 -> decay 1,
+        # contribution 0 (identity step). Valid positions are a prefix, so
+        # masked tokens can never sit inside a valid token's conv window.
+        dt = jnp.where(jnp.arange(s)[None, :, None] < n_valid[:, None, None],
+                       dt, 0.0)
+        # causal conv continuing from the carried window: same sliding sum
+        # as prefill, but left-padded with conv_state instead of zeros
+        cat = jnp.concatenate([conv_state, xbc], axis=1)   # [B,cw-1+S,ch]
+        conv = sum(cat[:, i:i + s] * p["conv_w"][i] for i in range(cw))
         xbc_c = jax.nn.silu(conv + p["conv_b"])
-        new_conv_state = cat[:, 1:]
+        # each row's new window ends at its own last valid token
+        new_conv_state = (jax.vmap(
+            lambda c, nv: jax.lax.dynamic_slice_in_dim(c, nv, cw - 1, axis=0)
+        )(cat, n_valid) if cw > 1 else None)
 
     xh, BC = jnp.split(xbc_c, [di], axis=-1)
     Bm, Cm = jnp.split(BC, 2, axis=-1)
@@ -168,6 +187,12 @@ def mamba2_layer(p, x, cfg, policy: Optional[PrecisionPolicy] = None,
 
     if not decode:
         y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg, chunk=chunk)
+    elif s > 1:
+        # chunked-prefill continuation: SSD with the carried initial state
+        # (dt of invalid tokens is already zeroed -> identity steps)
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg,
+                               init_state=state.astype(jnp.float32),
+                               chunk=chunk)
     else:
         # recurrence: h' = h * exp(-dt*A) + dt * x ⊗ B ; y = C·h'
         dt1 = dt[:, 0]                                     # [B,H]

@@ -1,0 +1,4 @@
+"""Continuous-batching serving subsystem (slot pool + ragged KV cache)."""
+from .engine import (FinishedRequest, Request, SamplingParams, ServingEngine)
+
+__all__ = ["Request", "FinishedRequest", "SamplingParams", "ServingEngine"]

@@ -1,0 +1,343 @@
+"""Continuous-batching serving engine — slot pool over the ragged cache.
+
+The software analogue of Flex-PE's time-multiplexed PE array: a fixed pool
+of `max_slots` decode slots (jit-stable shapes) whose rows never have to
+start or finish together. Each slot holds one request's KV/SSM cache row;
+`cache["lengths"][slot]` is that request's private position counter.
+
+One engine tick runs two kinds of jitted step, both jit-stable shapes:
+
+  * per-slot chunked prefill — tokens [1, prefill_chunk] against ONE
+    slot's cache row (sliced out of the pool by a traced slot index): each
+    slot mid-prompt bulk-writes up to a chunk of its prompt per tick.
+    Prefill compute scales with the admitted prompt, not the pool width.
+  * pool decode — tokens [B, 1] with per-row `n_valid` (1 for rows at the
+    generation frontier, 0 for idle/prefilling rows, whose cache rows stay
+    bit-untouched). Decoding slots emit a token on every tick even while
+    newly admitted requests prefill — no slot ever stalls.
+
+Admission happens between ticks: a finished slot (EOS or max tokens) is
+released immediately and the next pending request starts prefilling into
+it mid-flight, with its position counter reset to 0 — stale cache above a
+row's length is masked per row, so slot reuse needs no cache zeroing.
+
+Sampling is per-request: greedy / temperature / top-k from
+`Request.sampling`, with a per-request RNG key (folded per emitted token),
+so a request's sampled tokens are independent of whatever happens to be
+co-scheduled with it.
+
+The jitted step functions come from `launch.steps.build_prefill_step(
+with_cache=True)` / `build_serve_step` — the same builders the dry-run and
+benchmarks use. On a multi-host mesh the builders' sharding trees apply to
+float params; QuantizedTensor sharding rules are a ROADMAP follow-up, so
+the engine jits without explicit in_shardings (single-host serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch import steps as S
+from ..launch.mesh import make_host_mesh
+from ..models import model as M
+
+#: compiled (prefill, decode) step pairs shared across engine instances —
+#: keyed on everything that shapes the computation, so spinning up a new
+#: engine against the same (cfg, policy, pool geometry) costs no recompile
+_STEP_CACHE: dict = {}
+
+
+def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk):
+    key = (cfg, policy, mesh, max_slots, alloc, chunk)
+    if key not in _STEP_CACHE:
+        prefill_fn, *_ = S.build_prefill_step(
+            cfg, mesh, policy, with_cache=True, batch=max_slots,
+            max_len=alloc, chunk=chunk)
+        decode_fn, *_ = S.build_serve_step(
+            cfg, mesh, policy, batch=max_slots, max_len=alloc, chunk=1)
+        _STEP_CACHE[key] = (jax.jit(prefill_fn, donate_argnums=(1,)),
+                            jax.jit(decode_fn, donate_argnums=(1,)))
+    return _STEP_CACHE[key]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _sample_tokens(vocab: int, logits, keys, temps, topks):
+    """logits [R, V*] -> tokens [R]: per-row greedy / temperature / top-k."""
+    lg = logits[:, :vocab].astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1)
+    srt = jnp.sort(lg, axis=-1)[:, ::-1]
+    kidx = jnp.clip(topks - 1, 0, vocab - 1)
+    thresh = jnp.take_along_axis(srt, kidx[:, None], axis=1)
+    filt = jnp.where((topks[:, None] > 0) & (lg < thresh), -jnp.inf, lg)
+    scaled = filt / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration (temperature<=0 -> greedy)."""
+    temperature: float = 0.0
+    top_k: int = 0          # 0 -> no top-k filter
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `prompt` is a [P] int token array/list (or
+    [P, d_model] float embeds for embeds-mode archs)."""
+    prompt: Any
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    seed: Optional[int] = None      # None -> derived from engine seed + id
+    id: Optional[int] = None        # assigned at submit() when None
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    id: int
+    prompt: Any
+    tokens: List[int]               # generated tokens (incl. EOS if hit)
+    finish_reason: str              # 'eos' | 'length'
+    prompt_len: int
+    admitted_tick: int
+    finished_tick: int
+
+
+class _Slot:
+    """Host-side state of one occupied decode slot."""
+
+    def __init__(self, request: Request, key, tick: int):
+        self.request = request
+        self.key = key                       # per-request base PRNG key
+        self.prefill_pos = 0                 # prompt tokens consumed
+        self.generated: List[int] = []
+        self.next_input: Optional[int] = None  # last sampled token
+        self.admitted_tick = tick
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.request.prompt)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_pos < self.prompt_len
+
+
+class ServingEngine:
+    """Slot-based continuous-batching engine over `models.model.decode_step`.
+
+    Usage:
+        eng = ServingEngine(cfg, params, policy=pol, max_slots=4,
+                            max_len=256)
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=8))
+        for fin in eng.events():       # streams FinishedRequest
+            ...
+    """
+
+    def __init__(self, cfg, params, policy=None, max_slots: int = 4,
+                 max_len: int = 256, prefill_chunk: int = 32, seed: int = 0,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.seed = seed
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+
+        # over-allocate by one chunk: a ragged write window [len, len+chunk)
+        # must stay in bounds for every row with len < max_len (see
+        # layers.ragged_cache_update)
+        alloc = max_len + prefill_chunk
+        self.cache = M.init_cache(cfg, max_slots, alloc, policy)
+
+        self._prefill, self._decode = _compiled_steps(
+            cfg, policy, self.mesh, max_slots, alloc, prefill_chunk)
+
+        self.slots: List[Optional[_Slot]] = [None] * max_slots
+        self.pending: deque = deque()
+        self.tick = 0
+        self._next_id = 0
+        # cumulative stats
+        self.prompt_tokens = 0
+        self.generated_tokens = 0
+        self.busy_slot_ticks = 0
+        self.total_slot_ticks = 0
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        plen = len(request.prompt)
+        if plen < 1:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "token to prefill")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if plen + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens ({request.max_new_tokens})"
+                f" exceeds engine max_len ({self.max_len})")
+        if request.id is None:
+            request.id = self._next_id
+        self._next_id = max(self._next_id, request.id) + 1
+        self.pending.append(request)
+        return request.id
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(s is not None for s in self.slots)
+
+    def _request_key(self, req: Request):
+        if req.seed is not None:
+            return jax.random.PRNGKey(req.seed)
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), req.id)
+
+    def _admit(self):
+        for b in range(self.max_slots):
+            if self.slots[b] is None and self.pending:
+                req = self.pending.popleft()
+                self.slots[b] = _Slot(req, self._request_key(req), self.tick)
+                # reset this row's position counter; stale KV above a row's
+                # length is masked per row, so the KV cache needs no zeroing
+                self.cache["lengths"] = self.cache["lengths"].at[b].set(0)
+                if "ssm" in self.cache:
+                    # SSM state is a recurrent carry, not a masked window —
+                    # a reused slot must start from the zero state
+                    self.cache["ssm"] = tuple(
+                        a.at[:, b].set(jnp.zeros((), a.dtype))
+                        for a in self.cache["ssm"])
+
+    # -- one engine tick ----------------------------------------------------
+
+    def _prefill_block(self, slot: "_Slot"):
+        """[1, chunk] block holding this slot's next prompt chunk."""
+        cfg = self.cfg
+        chunk = self.prefill_chunk
+        take = min(chunk, slot.prompt_len - slot.prefill_pos)
+        part = np.asarray(slot.request.prompt[slot.prefill_pos:
+                                              slot.prefill_pos + take])
+        if cfg.input_mode == "tokens":
+            block = np.zeros((1, chunk), np.int64)
+            block[0, :take] = part
+            return jnp.asarray(block, jnp.int32), take
+        block = np.zeros((1, chunk, cfg.d_model), np.float32)
+        block[0, :take] = part
+        return jnp.asarray(block, jnp.bfloat16), take
+
+    def _decode_block(self, rows):
+        """[B, 1] block carrying each frontier row's last sampled token."""
+        cfg = self.cfg
+        if cfg.input_mode == "tokens":
+            block = np.zeros((self.max_slots, 1), np.int64)
+            for b in rows:
+                block[b, 0] = self.slots[b].next_input
+            return jnp.asarray(block, jnp.int32)
+        # embeds-mode stubs feed the one-hot of the sampled token
+        block = np.zeros((self.max_slots, 1, cfg.d_model), np.float32)
+        for b in rows:
+            block[b, 0, self.slots[b].next_input % cfg.d_model] = 1.0
+        return jnp.asarray(block, jnp.bfloat16)
+
+    def step(self) -> List[FinishedRequest]:
+        """One engine tick: admit, advance every prefilling slot one chunk
+        (per-slot [1,chunk] calls), decode every frontier slot ([B,1]
+        call), sample, release finished slots. Returns the requests that
+        finished on this tick."""
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return []
+
+        sample_logits = {}                       # row -> logits [V*]
+        # 1) chunked prefill, one chunk per prefilling slot (B=1 calls);
+        #    the final chunk's last-valid logits seed the first sample
+        for b, slot in enumerate(self.slots):
+            if slot is not None and slot.prefilling:
+                tokens, take = self._prefill_block(slot)
+                lg, self.cache = self._prefill(
+                    self.params, self.cache, tokens,
+                    jnp.asarray([take], jnp.int32), jnp.int32(b))
+                slot.prefill_pos += take
+                if not slot.prefilling:
+                    sample_logits[b] = lg[0]
+
+        # 2) pool decode for rows already holding a sampled token
+        dec_rows = [b for b, s in enumerate(self.slots)
+                    if s is not None and not s.prefilling
+                    and s.next_input is not None and b not in sample_logits]
+        if dec_rows:
+            n_valid = np.zeros((self.max_slots,), np.int32)
+            n_valid[dec_rows] = 1
+            lg, self.cache = self._decode(
+                self.params, self.cache, self._decode_block(dec_rows),
+                jnp.asarray(n_valid))
+            for b in dec_rows:
+                sample_logits[b] = lg[b]
+
+        # 3) per-request sampling over every row that produced logits
+        rows = sorted(sample_logits)
+        finished: List[FinishedRequest] = []
+        if rows:
+            keys, temps, topks = [], [], []
+            for b in rows:
+                slot = self.slots[b]
+                keys.append(jax.random.fold_in(slot.key, len(slot.generated)))
+                temps.append(slot.request.sampling.temperature)
+                topks.append(slot.request.sampling.top_k)
+            toks = np.asarray(_sample_tokens(
+                self.cfg.vocab,
+                jnp.stack([sample_logits[b] for b in rows]),
+                jnp.stack(keys), jnp.asarray(np.asarray(temps, np.float32)),
+                jnp.asarray(np.asarray(topks, np.int32))))
+            for i, b in enumerate(rows):
+                slot = self.slots[b]
+                t = int(toks[i])
+                slot.generated.append(t)
+                slot.next_input = t
+                req = slot.request
+                hit_eos = req.eos_id is not None and t == req.eos_id
+                if hit_eos or len(slot.generated) >= req.max_new_tokens:
+                    finished.append(FinishedRequest(
+                        id=req.id, prompt=req.prompt,
+                        tokens=slot.generated,
+                        finish_reason="eos" if hit_eos else "length",
+                        prompt_len=slot.prompt_len,
+                        admitted_tick=slot.admitted_tick,
+                        finished_tick=self.tick))
+                    self.prompt_tokens += slot.prompt_len
+                    self.generated_tokens += len(slot.generated)
+                    self.slots[b] = None        # release: admit next tick
+
+        self.busy_slot_ticks += sum(s is not None for s in self.slots) \
+            + len(finished)
+        self.total_slot_ticks += self.max_slots
+        self.tick += 1
+        return finished
+
+    def events(self):
+        """Generator: run ticks until idle, yielding completions as they
+        happen (streaming consumption)."""
+        while self.has_work():
+            yield from self.step()
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> List[FinishedRequest]:
+        """Submit `requests` (if given), drive to completion, return
+        finished requests sorted by id."""
+        for r in requests or ():
+            self.submit(r)
+        done = list(self.events())
+        return sorted(done, key=lambda f: f.id)
+
+    def stats(self) -> dict:
+        util = self.busy_slot_ticks / max(self.total_slot_ticks, 1)
+        return {"ticks": self.tick,
+                "prompt_tokens": self.prompt_tokens,
+                "generated_tokens": self.generated_tokens,
+                "slot_utilization": util}

@@ -127,7 +127,7 @@ def test_quantize_params_surgery(rng):
                 "bq": jnp.zeros((2, 16), jnp.float32)},
             "mlp": {"w1": jnp.asarray(
                 rng.normal(size=(2, 8, 24)).astype(np.float32))},
-            "moe": {"w1": jnp.asarray(      # 4-D expert bank: must stay float
+            "moe": {"w1": jnp.asarray(      # 4-D expert bank [L,E,K,N]
                 rng.normal(size=(2, 4, 8, 24)).astype(np.float32))},
             "norm": {"w": jnp.ones((2, 8), jnp.float32)},
         },
@@ -137,10 +137,13 @@ def test_quantize_params_surgery(rng):
     assert isinstance(qp["blocks"]["attn"]["wq"], QuantizedTensor)
     assert isinstance(qp["blocks"]["mlp"]["w1"], QuantizedTensor)
     assert isinstance(qp["lm_head"], QuantizedTensor)
-    # embeddings, biases, norms, 4-D expert banks untouched
+    # 4-D MoE expert banks quantize per (layer, expert, channel) — they are
+    # consumed per-expert by kernels.dispatch.expert_matmul
+    assert isinstance(qp["blocks"]["moe"]["w1"], QuantizedTensor)
+    assert qp["blocks"]["moe"]["w1"].scale.shape == (2, 4, 1, 24)
+    # embeddings, biases, norms untouched
     assert isinstance(qp["embed"], jax.Array)
     assert isinstance(qp["blocks"]["attn"]["bq"], jax.Array)
-    assert isinstance(qp["blocks"]["moe"]["w1"], jax.Array)
     assert isinstance(qp["blocks"]["norm"]["w"], jax.Array)
     qb, fb = packed_bytes(qp)
     assert 0 < qb < fb
@@ -265,16 +268,28 @@ def test_transformer_block_parity(tiny_cfg, rng):
 
 def test_greedy_decode_token_parity(tiny_cfg):
     """Acceptance: greedy tokens from the pallas backend match the reference
-    backend for >= 95% of generated positions (same quantized weights)."""
-    from repro.launch.serve import generate, prepare_serving_params
+    backend for >= 95% of generated positions (same quantized weights),
+    through the continuous-batching engine on a mixed-length batch."""
+    from repro.launch.serve import prepare_serving_params
     from repro.models import model as M
+    from repro.serving import Request, ServingEngine
     cfg = tiny_cfg
     pol = PrecisionPolicy.flexpe(8)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     qp = prepare_serving_params(params, pol)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab)
-    toks_ref = generate(cfg, qp, prompts, 6, policy=pol)
-    toks_pal = generate(cfg, qp, prompts, 6,
-                        policy=pol.with_backend("pallas-interpret"))
-    match = float(jnp.mean((toks_ref == toks_pal).astype(jnp.float32)))
-    assert match >= 0.95, (match, toks_ref.tolist(), toks_pal.tolist())
+
+    def serve(backend):
+        eng = ServingEngine(cfg, qp, policy=pol.with_backend(backend),
+                            max_slots=2, max_len=16, prefill_chunk=4)
+        reqs = [Request(prompt=jax.random.randint(
+                    jax.random.fold_in(jax.random.PRNGKey(1), i),
+                    (plen,), 0, cfg.vocab), max_new_tokens=6, id=i)
+                for i, plen in enumerate((4, 7))]
+        return [f.tokens for f in eng.run(reqs)]
+
+    toks_ref = serve("reference")
+    toks_pal = serve("pallas-interpret")
+    flat_r = [t for r in toks_ref for t in r]
+    flat_p = [t for r in toks_pal for t in r]
+    match = np.mean([a == b for a, b in zip(flat_r, flat_p)])
+    assert match >= 0.95, (match, toks_ref, toks_pal)

@@ -47,7 +47,7 @@ def test_arch_smoke_forward_loss_decode(arch):
     lg, cache2 = M.decode_step(cfg, p, cache, seq_in[:, :1])
     assert lg.shape == (2, 1, v)
     assert not bool(jnp.any(jnp.isnan(lg)))
-    assert int(cache2["len"]) == 1
+    assert cache2["lengths"].tolist() == [1, 1]
 
 
 @pytest.mark.parametrize("arch", ["mistral_nemo_12b", "zamba2_1p2b",

@@ -1,0 +1,237 @@
+"""Continuous-batching serving tests: ragged per-request cache semantics
+(chunked prefill == token-by-token, batch-composition independence),
+engine scheduling (EOS early release, late admission), per-request RNG."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PrecisionPolicy
+from repro.models import model as M
+from repro.serving import FinishedRequest, Request, SamplingParams, \
+    ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(cfg):
+    return M.init_params(cfg, KEY, dtype=jnp.float32)
+
+
+def _prompt(i, plen, cfg):
+    key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(key, (plen,), 0, cfg.vocab)
+    return jax.random.normal(key, (plen, cfg.d_model), jnp.bfloat16)
+
+
+def _req(i, plen, cfg, gen=6, **kw):
+    return Request(prompt=_prompt(i, plen, cfg), max_new_tokens=gen, id=i,
+                   **kw)
+
+
+# ---------------------------------------------------------------------------
+# ragged decode_step semantics (no engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2_5_14b", "mamba2_370m",
+                                  "zamba2_1p2b", "deepseek_moe_16b"])
+def test_chunked_prefill_matches_token_by_token(arch):
+    """One bulk decode_step call over the prompt == S token-by-token steps:
+    same last logits, same per-request lengths, for all cache families."""
+    cfg = get_config(arch).reduced()
+    p = _params(cfg)
+    seq = jax.random.randint(KEY, (2, 10), 0, cfg.vocab)
+    cache_a = M.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    lg_a, cache_a = M.decode_step(cfg, p, cache_a, seq)
+    cache_b = M.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    for t in range(10):
+        lg_b, cache_b = M.decode_step(cfg, p, cache_b, seq[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(lg_a[:, -1]), np.asarray(lg_b[:, 0]),
+                               atol=2e-5)
+    assert cache_a["lengths"].tolist() == cache_b["lengths"].tolist() == \
+        [10, 10]
+
+
+def test_ragged_rows_advance_independently():
+    """n_valid=0 rows leave cache + lengths bit-untouched while other rows
+    decode; per-row positions continue from each row's own length."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    seq = jax.random.randint(KEY, (2, 6), 0, cfg.vocab)
+    cache = M.init_cache(cfg, 2, 12, dtype=jnp.float32)
+    _, cache = M.decode_step(cfg, p, cache, seq,
+                             n_valid=jnp.array([6, 3], jnp.int32))
+    assert cache["lengths"].tolist() == [6, 3]
+    row1_kv = np.asarray(cache["kv"]["k"][:, 1])
+    # row 0 idles, row 1 decodes one token
+    _, cache2 = M.decode_step(cfg, p, cache, seq[:, :1],
+                              n_valid=jnp.array([0, 1], jnp.int32))
+    assert cache2["lengths"].tolist() == [6, 4]
+    np.testing.assert_array_equal(np.asarray(cache2["kv"]["k"][:, 0]),
+                                  np.asarray(cache["kv"]["k"][:, 0]))
+    # row 1's previously-valid prefix is untouched; position 3 was written
+    np.testing.assert_array_equal(np.asarray(cache2["kv"]["k"][:, 1, :3]),
+                                  row1_kv[:, :3])
+    assert not np.array_equal(np.asarray(cache2["kv"]["k"][:, 1, 3]),
+                              row1_kv[:, 3])
+
+
+def test_last_only_gathers_per_row_valid_position():
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    seq = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    nv = jnp.array([8, 5], jnp.int32)
+    cache = M.init_cache(cfg, 2, 12, dtype=jnp.float32)
+    full, _ = M.decode_step(cfg, p, cache, seq, n_valid=nv)
+    cache = M.init_cache(cfg, 2, 12, dtype=jnp.float32)
+    last, _ = M.decode_step(cfg, p, cache, seq, n_valid=nv, last_only=True)
+    assert last.shape[1] == 1
+    np.testing.assert_array_equal(np.asarray(last[0, 0]),
+                                  np.asarray(full[0, 7]))
+    np.testing.assert_array_equal(np.asarray(last[1, 0]),
+                                  np.asarray(full[1, 4]))
+
+
+# ---------------------------------------------------------------------------
+# engine: batch-composition independence (the headline invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2_5_14b", "mamba2_370m",
+                                  "zamba2_1p2b", "deepseek_moe_16b"])
+def test_request_alone_matches_mixed_batch(arch):
+    """A request decoded alone is bit-identical (greedy, reference backend)
+    to the same request decoded inside a mixed-length batch with slot
+    reuse and late admission."""
+    cfg = get_config(arch).reduced()
+    p = _params(cfg)
+    lens = [(0, 5), (1, 11), (2, 8), (3, 3), (4, 9)]
+
+    def run(ids):
+        eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4)
+        done = eng.run([_req(i, pl, cfg) for i, pl in lens if i in ids])
+        return {f.id: f.tokens for f in done}
+
+    mixed = run({0, 1, 2, 3, 4})
+    for i, pl in lens:
+        alone = run({i})
+        assert alone[i] == mixed[i], (arch, i, alone[i], mixed[i])
+
+
+def test_late_admitted_request_gets_correct_positions():
+    """A request admitted mid-decode into a reused slot (stale cache from
+    the previous occupant above its length) matches its solo run."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    # 1 slot: requests run strictly one after another through the same row
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    serial = {f.id: f.tokens for f in
+              eng.run([_req(0, 12, cfg), _req(1, 4, cfg)])}
+    solo = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    alone = solo.run([_req(1, 4, cfg)])[0].tokens
+    assert serial[1] == alone
+
+
+def test_eos_early_release_frees_slot():
+    """EOS finishes a request early, frees its slot, and the next pending
+    request is admitted into it."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    probe = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    first_tok = probe.run([_req(0, 6, cfg, gen=1)])[0].tokens[0]
+
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    reqs = [_req(0, 6, cfg, gen=8, eos_id=first_tok), _req(1, 4, cfg)]
+    done = {f.id: f for f in eng.run(reqs)}
+    assert done[0].finish_reason == "eos"
+    assert done[0].tokens == [first_tok]        # stopped after 1 token
+    assert done[1].finish_reason == "length"
+    assert len(done[1].tokens) == 6
+    # slot was actually reused: request 1 started after request 0 finished
+    assert done[1].admitted_tick > done[0].finished_tick - 1
+    # and its output is batch-composition independent
+    solo = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    assert solo.run([_req(1, 4, cfg)])[0].tokens == done[1].tokens
+
+
+def test_prefill_chunk_size_does_not_change_output():
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    outs = []
+    for chunk in (2, 5, 16):
+        eng = ServingEngine(cfg, p, max_slots=2, max_len=24,
+                            prefill_chunk=chunk)
+        outs.append({f.id: f.tokens
+                     for f in eng.run([_req(0, 9, cfg), _req(1, 6, cfg)])})
+    assert outs[0] == outs[1] == outs[2]
+
+
+# ---------------------------------------------------------------------------
+# sampling: per-request RNG + params
+# ---------------------------------------------------------------------------
+
+def test_sampled_output_independent_of_coscheduled_requests():
+    """Per-request RNG: a temperature-sampled request produces the same
+    tokens whether it runs alone or next to other requests."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    sp = SamplingParams(temperature=0.8, top_k=12)
+
+    def run(ids):
+        eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4)
+        reqs = [_req(i, pl, cfg, sampling=sp, seed=100 + i)
+                for i, pl in [(0, 6), (1, 9), (2, 4)] if i in ids]
+        return {f.id: f.tokens for f in eng.run(reqs)}
+
+    mixed = run({0, 1, 2})
+    for i in (0, 1, 2):
+        assert run({i})[i] == mixed[i], i
+
+
+def test_per_request_sampling_params_apply():
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4)
+    greedy = _req(0, 6, cfg)
+    hot = _req(1, 6, cfg, sampling=SamplingParams(temperature=1.5), seed=7)
+    done = {f.id: f.tokens for f in eng.run([greedy, hot])}
+    # greedy row must equal a solo greedy run (unperturbed by the hot row)
+    solo = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    assert done[0] == solo.run([_req(0, 6, cfg)])[0].tokens
+    # hot sampling with a different seed gives a different trajectory
+    eng2 = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    other = eng2.run([_req(1, 6, cfg,
+                           sampling=SamplingParams(temperature=1.5),
+                           seed=8)])[0].tokens
+    assert other != done[1]
+
+
+# ---------------------------------------------------------------------------
+# engine hygiene
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_invalid_requests():
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=10, prefill_chunk=4)
+    with pytest.raises(ValueError):               # oversized
+        eng.submit(_req(0, 8, cfg, gen=8))
+    with pytest.raises(ValueError):               # empty prompt wedges slot
+        eng.submit(Request(prompt=[], max_new_tokens=4))
+    with pytest.raises(ValueError):               # zero-token generation
+        eng.submit(_req(1, 4, cfg, gen=0))
+    assert not eng.has_work()
+
+
+def test_stats_and_finished_metadata():
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4)
+    done = eng.run([_req(0, 6, cfg, gen=4), _req(1, 9, cfg, gen=4)])
+    assert all(isinstance(f, FinishedRequest) for f in done)
+    st = eng.stats()
+    assert st["prompt_tokens"] == 15
+    assert st["generated_tokens"] == 8
+    assert 0.0 < st["slot_utilization"] <= 1.0
+    assert not eng.has_work()
