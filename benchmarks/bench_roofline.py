@@ -6,9 +6,8 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 
-from repro.launch.roofline import CHIP, analyse_record, format_table
+from repro.launch.roofline import analyse_record, format_table
 
 
 def run(csv_rows):

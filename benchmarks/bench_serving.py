@@ -1,15 +1,34 @@
-"""Continuous-batching vs static-batch serving on a mixed-length workload.
+"""Continuous-batching vs static-batch serving on a mixed-length workload,
+plus the paged-KV capacity experiment.
 
 The seed serving driver prefetched token-by-token through the jitted
 decode step and ran the whole batch in lockstep: every request padded to
 the longest prompt, the batch admitted and finished together, slots idle
 whenever their request was shorter than the stragglers. The engine replaces
-that with chunked prefill + per-request slot scheduling. This bench runs
-the same mixed-length workload through both drivers and reports tok/s
-(useful tokens: real prompt + generated) and slot utilization.
+that with chunked prefill + per-request slot scheduling; the paged KV
+cache additionally replaces the per-slot contiguous max_len window with a
+global block pool + per-slot block tables, so the cache byte budget caps
+tokens actually held, not slots x worst-case length.
+
+Three measurements:
+  * tok/s — static driver vs engine (contiguous) vs engine (paged). The
+    paged engine must match contiguous throughput (same compute, gathered
+    view) while decoding bit-identical tokens.
+  * concurrent-slot capacity at a FIXED cache byte budget — the budget
+    that gives the contiguous layout SLOTS slots is handed to the paged
+    engine as a block pool; we drive the doubled mixed workload and record
+    the peak number of requests simultaneously in flight. Mixed lengths
+    are the point: reservation is per-request worst case, far below the
+    global max_len.
+  * a BENCH_serving.json artifact for CI's perf-regression gate
+    (`benchmarks/check_regression.py`): machine-portable ratios (engine
+    vs static speedup, paged-vs-contiguous overhead, capacity ratio) plus
+    the absolute tok/s for human eyes.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -21,21 +40,25 @@ from repro.models import model as M
 from repro.serving import Request, ServingEngine
 
 SLOTS = 4
+KV_BLOCK = 8
 # heterogeneous prompts AND generation lengths — the workload class
 # continuous batching exists for: lockstep batches idle short requests
 # until the wave's straggler finishes; the engine backfills freed slots
 PROMPT_LENS = (24, 6, 16, 3, 20, 9, 12, 5)
 GEN_LENS = (12, 2, 8, 3, 10, 4, 6, 2)
 MAX_LEN = max(PROMPT_LENS) + max(GEN_LENS)
+PREFILL_CHUNK = 8
 
 
-def _requests(cfg):
+def _requests(cfg, copies=1):
     reqs = []
-    for i, plen in enumerate(PROMPT_LENS):
-        key = jax.random.fold_in(jax.random.PRNGKey(1), i)
-        reqs.append(Request(prompt=jax.random.randint(key, (plen,), 0,
-                                                      cfg.vocab),
-                            max_new_tokens=GEN_LENS[i], id=i))
+    for c in range(copies):
+        for i, plen in enumerate(PROMPT_LENS):
+            key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+            reqs.append(Request(prompt=jax.random.randint(key, (plen,), 0,
+                                                          cfg.vocab),
+                                max_new_tokens=GEN_LENS[i],
+                                id=c * len(PROMPT_LENS) + i))
     return reqs
 
 
@@ -65,51 +88,116 @@ def _static_driver(cfg, params, policy, reqs, decode):
     return useful
 
 
-def _engine_driver(cfg, params, policy, reqs):
+def _engine_driver(cfg, params, policy, reqs, **kw):
     eng = ServingEngine(cfg, params, policy=policy, max_slots=SLOTS,
-                        max_len=MAX_LEN, prefill_chunk=8)
+                        max_len=MAX_LEN, prefill_chunk=PREFILL_CHUNK, **kw)
     eng.run(reqs)
     st = eng.stats()
-    return st["prompt_tokens"] + st["generated_tokens"], st
+    return st["prompt_tokens"] + st["generated_tokens"], st, eng
 
 
-def run(rows):
+def _capacity_at_budget(cfg, params, policy):
+    """Peak concurrent requests under the contiguous layout's byte budget.
+
+    Contiguous spends SLOTS x alloc cache positions and can never hold
+    more than SLOTS requests. The paged engine gets the same positions as
+    a block pool (its default kv_blocks IS byte parity) but many more slot
+    rows; admission is bounded by block reservation only, so the peak
+    in-flight count measures what the byte budget actually buys."""
+    wide = 4 * SLOTS
+    eng = ServingEngine(cfg, params, policy=policy, max_slots=wide,
+                        max_len=MAX_LEN, prefill_chunk=PREFILL_CHUNK,
+                        kv_block_size=KV_BLOCK,
+                        kv_blocks=SLOTS * -(-(MAX_LEN + PREFILL_CHUNK)
+                                            // KV_BLOCK))
+    for r in _requests(cfg, copies=2):
+        eng.submit(r)
+    peak = 0
+    while eng.has_work():
+        eng.step()
+        peak = max(peak, sum(s is not None for s in eng.slots))
+    return peak, eng.stats()
+
+
+def run(rows, json_path=None):
     cfg = get_config("qwen2_5_14b").reduced()
     policy = PrecisionPolicy.flexpe(8)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     decode = jax.jit(lambda p, c, t: M.decode_step(cfg, p, c, t,
                                                    policy=policy))
 
-    # warm both paths over the full workload (compile time excluded)
+    # warm every path over the full workload (compile time excluded)
     _static_driver(cfg, params, policy, _requests(cfg), decode)
     _engine_driver(cfg, params, policy, _requests(cfg))
+    _engine_driver(cfg, params, policy, _requests(cfg),
+                   kv_block_size=KV_BLOCK)
 
     t0 = time.time()
     useful_s = _static_driver(cfg, params, policy, _requests(cfg), decode)
     dt_s = time.time() - t0
     t0 = time.time()
-    useful_e, st = _engine_driver(cfg, params, policy, _requests(cfg))
+    useful_e, st, _ = _engine_driver(cfg, params, policy, _requests(cfg))
     dt_e = time.time() - t0
+    t0 = time.time()
+    useful_p, stp, _ = _engine_driver(cfg, params, policy, _requests(cfg),
+                                      kv_block_size=KV_BLOCK)
+    dt_p = time.time() - t0
+
+    peak, stc = _capacity_at_budget(cfg, params, policy)
 
     tps_s = useful_s / dt_s
     tps_e = useful_e / dt_e
+    tps_p = useful_p / dt_p
     print(f"static batch driver : {useful_s} tokens in {dt_s:.2f}s = "
           f"{tps_s:.1f} tok/s")
     print(f"continuous batching : {useful_e} tokens in {dt_e:.2f}s = "
           f"{tps_e:.1f} tok/s, slot utilization "
           f"{st['slot_utilization']:.0%} ({st['ticks']} ticks)")
-    print(f"speedup: {tps_e / tps_s:.2f}x")
+    print(f"paged KV (bs={KV_BLOCK})    : {useful_p} tokens in {dt_p:.2f}s = "
+          f"{tps_p:.1f} tok/s, peak blocks "
+          f"{stp['peak_blocks_used']}/{stp['kv_blocks']}")
+    print(f"speedup vs static: {tps_e / tps_s:.2f}x; "
+          f"paged/contiguous tok/s: {tps_p / tps_e:.2f}")
+    print(f"capacity at the contiguous byte budget "
+          f"({stc['kv_blocks']} blocks x {KV_BLOCK}): "
+          f"{peak} concurrent requests paged vs {SLOTS} contiguous "
+          f"({peak / SLOTS:.1f}x)")
     rows.append(("serving_static_tok_s", dt_s / useful_s * 1e6,
                  f"{tps_s:.1f} tok/s"))
     rows.append(("serving_engine_tok_s", dt_e / useful_e * 1e6,
                  f"{tps_e:.1f} tok/s "
                  f"util={st['slot_utilization']:.2f} "
                  f"speedup={tps_e / tps_s:.2f}x"))
+    rows.append(("serving_paged_tok_s", dt_p / useful_p * 1e6,
+                 f"{tps_p:.1f} tok/s "
+                 f"capacity={peak}/{SLOTS} slots at parity bytes"))
+    if json_path:
+        metrics = {
+            # absolute numbers (machine-dependent, reported for humans)
+            "static_tok_s": round(tps_s, 2),
+            "engine_tok_s": round(tps_e, 2),
+            "paged_tok_s": round(tps_p, 2),
+            # machine-portable ratios — what the CI gate compares
+            "speedup_vs_static": round(tps_e / tps_s, 4),
+            "paged_speedup_vs_static": round(tps_p / tps_s, 4),
+            "capacity_contiguous": SLOTS,
+            "capacity_paged": peak,
+            "capacity_ratio": round(peak / SLOTS, 4),
+            "slot_utilization": round(st["slot_utilization"], 4),
+        }
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {json_path}")
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write metrics JSON (CI perf-regression artifact)")
+    args = ap.parse_args()
     rows = []
-    run(rows)
+    run(rows, json_path=args.json)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

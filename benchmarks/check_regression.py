@@ -1,0 +1,81 @@
+"""CI perf-regression gate: compare a fresh BENCH_serving.json against the
+checked-in baseline and fail on steady-state throughput regressions.
+
+    python benchmarks/check_regression.py BENCH_serving.json \
+        benchmarks/baselines/serving.json [--tolerance 0.15]
+
+Gated metrics are the machine-portable ones: `speedup_vs_static` and
+`paged_speedup_vs_static` (engine steady-state tok/s normalised by the
+static-driver tok/s measured in the SAME run — a hosted runner being
+slow cancels out of the ratio) and `capacity_ratio` (paged concurrent
+slots per contiguous slot at byte parity — a scheduling invariant, fully
+deterministic). A gated metric more than `tolerance` below its baseline
+fails the job. Absolute tok/s is printed for trend-watching and gated
+only under --gate-absolute (off in CI: hosted-runner wall clock is not a
+stable reference).
+
+After an intentional perf change, refresh the baseline with
+    PYTHONPATH=src python benchmarks/bench_serving.py \
+        --json benchmarks/baselines/serving.json
+and commit it alongside the change.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio")
+INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly measured metrics JSON")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed fractional drop below baseline")
+    ap.add_argument("--gate-absolute", action="store_true",
+                    help="also gate absolute tok/s (same-machine runs only)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    gated = GATED + (INFORMATIONAL if args.gate_absolute else ())
+    failures = []
+    for key in gated:
+        if key not in base:
+            failures.append(f"{key}: missing from baseline JSON — stale or "
+                            "truncated baseline, regenerate it")
+            continue
+        if key not in cur:
+            failures.append(f"{key}: missing from current metrics")
+            continue
+        floor = base[key] * (1.0 - args.tolerance)
+        status = "OK " if cur[key] >= floor else "FAIL"
+        print(f"  [{status}] {key}: {cur[key]:.3f} "
+              f"(baseline {base[key]:.3f}, floor {floor:.3f})")
+        if cur[key] < floor:
+            failures.append(
+                f"{key}: {cur[key]:.3f} < floor {floor:.3f} "
+                f"(baseline {base[key]:.3f} - {args.tolerance:.0%})")
+    for key in INFORMATIONAL:
+        if not args.gate_absolute and key in cur:
+            ref = f" (baseline {base[key]:.1f})" if key in base else ""
+            print(f"  [info] {key}: {cur[key]:.1f}{ref}")
+
+    if failures:
+        print("\nperf regression gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print("\nperf regression gate passed "
+          f"({len(gated)} metrics within {args.tolerance:.0%} of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

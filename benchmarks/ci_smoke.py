@@ -1,0 +1,64 @@
+"""Unified CI serve smoke — the single entrypoint behind the workflow's
+smoke step (previously two hand-rolled `repro.launch.serve` invocations).
+
+    PYTHONPATH=src python benchmarks/ci_smoke.py --backend reference
+    PYTHONPATH=src python benchmarks/ci_smoke.py --backend pallas-interpret
+
+Each run drives the continuous-batching engine twice over the same
+mixed-length workload — once with the contiguous per-slot cache, once
+with the paged block-pool cache (`--kv-block-size`) — and fails if the
+paged run's greedy tokens differ from the contiguous run's (the paged
+layout must be bit-exact, not just plausible). Backend choice scales the
+workload down for the slower interpreted Pallas kernels.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.launch import serve
+
+# (requests, slots, prompt_len, gen, prefill_chunk) per backend — the
+# interpreted Pallas kernels are ~10x slower on CPU, so they smoke a
+# smaller workload (same shapes class, same code paths)
+WORKLOADS = {
+    "reference": (6, 3, 12, 6, 8),
+    "pallas": (4, 2, 8, 4, 4),
+    "pallas-interpret": (4, 2, 8, 4, 4),
+    "auto": (4, 2, 8, 4, 4),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="reference", choices=list(WORKLOADS))
+    ap.add_argument("--arch", default="qwen2_5_14b")
+    ap.add_argument("--kv-block-size", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    n, slots, plen, gen, chunk = WORKLOADS[args.backend]
+    base = ["--arch", args.arch, "--reduced", "--requests", str(n),
+            "--slots", str(slots), "--prompt-len", str(plen), "--mixed",
+            "--gen", str(gen), "--prefill-chunk", str(chunk),
+            "--policy", "flexpe-fxp8", "--backend", args.backend]
+
+    print(f"== contiguous KV ({args.backend}) ==")
+    contiguous = serve.main(base)
+    print(f"== paged KV, block size {args.kv_block_size} "
+          f"({args.backend}) ==")
+    paged = serve.main(base + ["--kv-block-size", str(args.kv_block_size)])
+
+    cont = {f.id: f.tokens for f in contiguous}
+    page = {f.id: f.tokens for f in paged}
+    if cont != page:
+        bad = [i for i in cont if cont[i] != page.get(i)]
+        print(f"FAIL: paged decode diverged from contiguous for request(s) "
+              f"{bad}", file=sys.stderr)
+        return 1
+    print(f"smoke OK: {len(cont)} requests, paged == contiguous bit-exact "
+          f"({args.backend})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

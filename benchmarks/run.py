@@ -8,6 +8,7 @@
   bench_roofline     EXPERIMENTS.md §Roofline (from dry-run artifacts)
   bench_backend      reference vs pallas GEMM + packed weight bytes-moved
   bench_serving      continuous batching vs static batch (tok/s, slot util)
+                     + paged-KV capacity at a fixed cache byte budget
 
 Prints ``name,us_per_call,derived`` CSV at the end.
 """

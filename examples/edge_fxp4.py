@@ -10,9 +10,7 @@ the DMA model reports what the same network costs on the 8x8 array.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import PrecisionPolicy
 from repro.core.activation import flex_af
 from repro.core.scheduler import LENET5, network_dma
 from repro.data.pipeline import classification_set

@@ -2,12 +2,10 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (FORMATS, FlexPE, FlexPEArray, PrecisionPolicy,
-                        fake_quant, flex_af)
+from repro.core import FlexPE, FlexPEArray, PrecisionPolicy, flex_af
 from repro.kernels.cordic_softmax.ops import cordic_softmax
 from repro.kernels.fxp_gemm.ops import fxp_gemm
 

@@ -10,11 +10,8 @@ The same entrypoint drives the production mesh: swap --mesh host for
 """
 import argparse
 import dataclasses
-import sys
 
-from repro.configs import get_config
 from repro.configs.base import ModelConfig
-from repro.launch import train as T
 
 LM_100M = ModelConfig(
     name="lm-100m", family="dense", n_layers=10, d_model=640, n_heads=10,
@@ -31,7 +28,6 @@ def main():
     args = ap.parse_args()
 
     if args.full:
-        import repro.configs.base as B
         import repro.launch.train as LT
         # register the 100M config under a temporary id
         cfg = LM_100M

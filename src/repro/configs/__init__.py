@@ -1,1 +1,5 @@
-from .base import ARCH_IDS, SHAPES, SUBQUADRATIC, ModelConfig, arch_shapes, get_config
+from .base import (ARCH_IDS, SHAPES, SUBQUADRATIC, ModelConfig, arch_shapes,
+                   get_config)
+
+__all__ = ["ARCH_IDS", "SHAPES", "SUBQUADRATIC", "ModelConfig",
+           "arch_shapes", "get_config"]

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Optional
 
 ARCH_IDS = [
     "mistral_nemo_12b", "deepseek_coder_33b", "qwen2_5_14b", "minicpm_2b",

@@ -24,13 +24,11 @@ run straight i=1..n, so `repeat_iters=False` is the faithful default.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .fxp import FxPFormat, FORMATS
+from .fxp import FxPFormat
 
 __all__ = [
     "PARETO_STAGES", "hyperbolic_gain", "hr_coshsinh_float", "exp_float",

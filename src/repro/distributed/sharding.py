@@ -16,7 +16,6 @@ Activation specs: batch over (pod, data), model-parallel feature dims over
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +61,8 @@ class MeshRules:
         With `spec_tree` (arrays or ShapeDtypeStructs, same structure),
         any dim whose size does not divide the assigned mesh axis is
         replicated instead — the divisibility safety net."""
-        is_leaf = lambda x: isinstance(x, tuple) or x is None
+        def is_leaf(x):
+            return isinstance(x, tuple) or x is None
         if spec_tree is None:
             return jax.tree.map(self.sharding_for, axes_tree, is_leaf=is_leaf)
 
@@ -125,8 +125,6 @@ class MeshRules:
         locally. Backward is an uncompressed psum-scatter (STE through the
         quantizer). Falls back to a plain constraint when S doesn't divide
         the model axis (decode)."""
-        import functools
-
         from ..core.fxp import FORMATS, dequantize, quantize
         from jax.experimental.shard_map import shard_map
 

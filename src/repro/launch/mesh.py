@@ -15,7 +15,6 @@ import inspect
 import math
 
 import jax
-import numpy as np
 from jax.sharding import Mesh
 
 

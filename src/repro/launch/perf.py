@@ -15,9 +15,7 @@ import argparse
 import dataclasses
 import json
 
-import jax
 
-from ..core.precision import PrecisionPolicy
 from . import dryrun as DR
 
 CELLS = {

@@ -16,7 +16,6 @@ compute (XLA counts 2MNK per dot, same convention as 6ND).
 """
 from __future__ import annotations
 
-import dataclasses
 
 from ..configs.base import SHAPES, get_config
 

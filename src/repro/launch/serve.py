@@ -75,6 +75,12 @@ def main(argv=None):
                     help="heterogeneous prompt lengths across requests")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="paged KV cache: tokens per pool block (0 = "
+                         "contiguous per-slot max_len windows)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged KV cache: pool size in blocks (0 = byte "
+                         "parity with the contiguous layout)")
     ap.add_argument("--policy", default="flexpe-fxp8")
     ap.add_argument("--backend", default="reference", choices=list(BACKENDS),
                     help="kernel backend for qmatmul/act/softmax; any "
@@ -105,7 +111,9 @@ def main(argv=None):
         engine = ServingEngine(
             cfg, params, policy=policy, max_slots=args.slots,
             max_len=args.prompt_len + args.gen,
-            prefill_chunk=args.prefill_chunk, seed=args.seed, mesh=mesh)
+            prefill_chunk=args.prefill_chunk, seed=args.seed, mesh=mesh,
+            kv_block_size=args.kv_block_size or None,
+            kv_blocks=args.kv_blocks or None)
         reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
                              mixed=args.mixed, temp=args.temp,
                              top_k=args.top_k, seed=args.seed)
@@ -126,6 +134,9 @@ def main(argv=None):
           f"{total / dt:.1f} tok/s, slot utilization "
           f"{st['slot_utilization']:.0%} "
           f"(policy {args.policy}, backend {args.backend}, arch {cfg.name})")
+    if engine.paged:
+        print(f"paged KV: {st['kv_blocks']} blocks x {st['kv_block_size']} "
+              f"tokens, peak in use {st['peak_blocks_used']}")
     return finished
 
 

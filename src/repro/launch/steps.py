@@ -9,7 +9,6 @@ real launcher, and the benchmarks.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -29,14 +28,16 @@ from ..optim import adamw
 
 
 def input_specs(cfg: ModelConfig, shape_name: str, policy=None,
-                batch=None, max_len=None, chunk=1):
+                batch=None, max_len=None, chunk=1, kv_block_size=None,
+                kv_blocks=None):
     """ShapeDtypeStructs for every model input of this (arch, shape) cell.
 
     For decode cells, `batch`/`max_len` override the registry shape (the
     serving engine's slot pool / cache allocation) and `chunk` is the token
     block width per step — 1 for plain decode, the prefill-chunk size for
     chunked-prefill steps. `n_valid` [B] is the ragged per-row valid-token
-    count fed alongside the block."""
+    count fed alongside the block. `kv_block_size`/`kv_blocks` switch the
+    cache spec to the paged block-pool layout (see model.init_cache)."""
     spec = SHAPES[shape_name]
     b, s = spec["global_batch"], spec["seq_len"]
     sd = jax.ShapeDtypeStruct
@@ -57,7 +58,8 @@ def input_specs(cfg: ModelConfig, shape_name: str, policy=None,
     b = batch if batch is not None else b
     s = max_len if max_len is not None else s
     cache = jax.eval_shape(
-        lambda: M.init_cache(cfg, b, s, policy))
+        lambda: M.init_cache(cfg, b, s, policy, kv_block_size=kv_block_size,
+                             kv_blocks=kv_blocks))
     tok = (sd((b, chunk), jnp.int32) if cfg.input_mode == "tokens"
            else sd((b, chunk, cfg.d_model), jnp.bfloat16))
     return {"cache": cache, "tokens": tok, "n_valid": sd((b,), jnp.int32)}
@@ -88,12 +90,17 @@ def batch_shardings(rules: MeshRules, tree, batch: int):
 def cache_shardings(cfg, rules: MeshRules, cache_tree, batch: int):
     """KV caches: batch over dp, SEQUENCE over model (split-KV decode —
     kv_heads (8) < model axis (16), so heads can't carry TP). SSM states:
-    heads over model."""
+    heads over model. Paged pools ([L, NB, bs, KV, hd], no batch axis) and
+    block tables are replicated — sharded paged serving is a ROADMAP
+    follow-up (the engine jits without in_shardings on a host mesh)."""
     dp = _dp_or_none(rules, batch)
     mesh = rules.mesh
+    paged = isinstance(cache_tree, dict) and "block_tables" in cache_tree
 
     def leaf_spec(path, s):
         names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        if paged and ("kv" in names or "block_tables" in names):
+            return P()
         if "kv" in names:     # [L, B, S, KV, hd] (+scales [L,B,S,KV,1])
             spec = P(None, dp, "model", None, None)
         elif "ssm" in names:
@@ -221,7 +228,7 @@ def build_train_step(cfg: ModelConfig, mesh, policy: Optional[PrecisionPolicy],
 def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
                        shape_name: str = "prefill_32k",
                        with_cache: bool = False, batch=None, max_len=None,
-                       chunk=None):
+                       chunk=None, kv_block_size=None, kv_blocks=None):
     """Cache-less full-prompt prefill (forward last_only — dry-run cost
     cells), or, `with_cache=True`, the serving engine's chunked prefill:
     a [1, chunk] token block run against ONE slot's cache row (sliced out
@@ -234,7 +241,8 @@ def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
         params_specs = model_state_specs(cfg, with_opt=False)
         p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
         specs = input_specs(cfg, "decode_32k", policy, batch=batch,
-                            max_len=max_len, chunk=chunk or 1)
+                            max_len=max_len, chunk=chunk or 1,
+                            kv_block_size=kv_block_size, kv_blocks=kv_blocks)
         specs["params"] = params_specs
         sd = jax.ShapeDtypeStruct
         specs["tokens"] = sd((1,) + specs["tokens"].shape[1:],
@@ -275,7 +283,8 @@ def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
 
 def build_serve_step(cfg, mesh, policy, fsdp: bool = False,
                      shape_name: str = "decode_32k", batch=None,
-                     max_len=None, chunk=1):
+                     max_len=None, chunk=1, kv_block_size=None,
+                     kv_blocks=None):
     """The ragged serving step: tokens [B, chunk] + n_valid [B] against the
     slot-pool cache. chunk=1 is plain decode; chunk>1 is the engine's
     chunked prefill (same step, wider block). Returns last-valid-position
@@ -284,7 +293,8 @@ def build_serve_step(cfg, mesh, policy, fsdp: bool = False,
     params_specs = model_state_specs(cfg, with_opt=False)
     p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
     specs = input_specs(cfg, shape_name, policy, batch=batch,
-                        max_len=max_len, chunk=chunk)
+                        max_len=max_len, chunk=chunk,
+                        kv_block_size=kv_block_size, kv_blocks=kv_blocks)
     specs["params"] = params_specs
     b = specs["tokens"].shape[0]
     c_shard = cache_shardings(cfg, rules, specs["cache"], b)

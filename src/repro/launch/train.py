@@ -12,7 +12,6 @@ config for CPU runs; on a pod slice, drop it and pass --mesh production.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import logging
 
 import jax

@@ -20,6 +20,7 @@ so the same layer code serves training and packed-weight inference.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional
 
@@ -249,6 +250,47 @@ def attn_axes(cfg):
     return ax
 
 
+def paged_cache_update(pool, new, block_tables, start, count):
+    """Paged per-request cache write: the logical update
+    buf[b, start[b]:start[b]+count[b]] <- new[b, :count[b]], with each
+    logical position translated through the row's block table into the
+    global block pool — only the blocks holding the current window see
+    HBM writes (the paged analogue of `ragged_cache_update`).
+
+    pool: [NB, bs, ...]; new: [B, S, ...]; block_tables: [B, MB] int32;
+    start/count: [B] int32. Logical position p of row b lands at
+    pool[block_tables[b, p // bs], p % bs]. Tokens past count[b] scatter
+    to block index NB (out of range) and are dropped, so idle rows
+    (count=0) are exact no-ops. Valid positions must already have a block
+    in the row's table — the serving engine allocates blocks for
+    [start, start+count) before dispatching the step.
+    """
+    b, s = new.shape[0], new.shape[1]
+    nb, bs = pool.shape[0], pool.shape[1]
+    pos = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]    # [B,S]
+    valid = jnp.arange(s)[None, :] < count[:, None]                   # [B,S]
+    tslot = jnp.clip(pos // bs, 0, block_tables.shape[1] - 1)
+    blk = jnp.take_along_axis(block_tables, tslot, axis=1)            # [B,S]
+    blk = jnp.where(valid, blk, nb)             # out-of-range -> dropped
+    off = pos % bs
+    flat = new.reshape((b * s,) + new.shape[2:])
+    return pool.at[blk.reshape(-1), off.reshape(-1)].set(
+        flat.astype(pool.dtype), mode="drop")
+
+
+def gather_block_kv(pool, block_tables):
+    """Materialise each row's contiguous cache view from the block pool.
+
+    pool: [NB, bs, ...]; block_tables: [B, MB] -> [B, MB*bs, ...] where
+    logical position p of row b sits at view index p (table slot p // bs,
+    offset p % bs). Unallocated table entries gather block 0's (finite)
+    data — every such position is >= the row's valid length and masked by
+    the attention kernels, contributing exact zeros."""
+    g = jnp.take(pool, block_tables, axis=0, mode="clip")
+    b, mb, bs = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape((b, mb * bs) + g.shape[3:])
+
+
 def ragged_cache_update(buf, new, start, count):
     """Per-request cache write: buf[b, start[b]:start[b]+count[b]] <-
     new[b, :count[b]], every other position of buf untouched.
@@ -273,7 +315,7 @@ def ragged_cache_update(buf, new, start, count):
 
 
 def attention(p, x, cfg, *, positions, policy=None, cache=None,
-              lengths=None, n_valid=None):
+              lengths=None, n_valid=None, block_tables=None):
     """Returns (out, new_cache_entry|None).
 
     Training/prefill: cache=None -> full chunked attention over x.
@@ -284,6 +326,13 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
     (ragged batches: rows prefill/decode/idle independently). The block is
     causal relative to per-row absolute positions, so S > 1 serves chunked
     prefill and S = 1 plain decode through the same code.
+
+    Paged decode: `block_tables` [B, MB] switches the cache leaves to a
+    global block pool [NB, bs, KV, hd] shared by all rows. New tokens
+    scatter into the current block only (`paged_cache_update`); attention
+    runs over the gathered per-row view (`gather_block_kv`), whose stale /
+    unallocated tail is masked exactly like the contiguous cache's — the
+    two layouts are bit-identical in what they compute.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -308,32 +357,46 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
             n_valid = jnp.full((b,), s, jnp.int32)
         kv_valid = lengths + n_valid                       # [B]
         kq_fmt = FORMATS[policy.kv_cache] if (policy and policy.kv_cache) else None
+        paged = block_tables is not None
+        if paged:
+            def write(buf, new):
+                return paged_cache_update(buf, new, block_tables, lengths,
+                                          n_valid)
+            view = functools.partial(gather_block_kv,
+                                     block_tables=block_tables)
+        else:
+            def write(buf, new):
+                return ragged_cache_update(buf, new, lengths, n_valid)
+
+            def view(buf):
+                return buf
         # write each row's new k/v at its own cache length
         if kq_fmt is not None:
             # per-(position, head) scales: old codes keep their own scale
             k_codes, ks_new = quantize(k, kq_fmt, axis=3)
             v_codes, vs_new = quantize(v, kq_fmt, axis=3)
-            kc = ragged_cache_update(kc, k_codes, lengths, n_valid)
-            vc = ragged_cache_update(vc, v_codes, lengths, n_valid)
-            k_scale = ragged_cache_update(k_scale, ks_new, lengths, n_valid)
-            v_scale = ragged_cache_update(v_scale, vs_new, lengths, n_valid)
+            kc = write(kc, k_codes)
+            vc = write(vc, v_codes)
+            k_scale = write(k_scale, ks_new)
+            v_scale = write(v_scale, vs_new)
             if getattr(policy, "int_attention", False):
                 # fully-integer FxP attention (§Perf): score/AV dots run on
                 # int8 codes directly — no bf16 dequantized cache copy is
                 # ever materialised; scales fold into q and the softmax
                 # weights (the Flex-PE SIMD MAC applied to attention).
                 out = int8_decode_attention(
-                    q, kc, vc, k_scale, v_scale, kq_fmt, policy,
-                    positions=positions, kv_valid_len=kv_valid)
+                    q, view(kc), view(vc), view(k_scale), view(v_scale),
+                    kq_fmt, policy, positions=positions,
+                    kv_valid_len=kv_valid)
                 new_cache = (kc, vc, k_scale, v_scale)
                 out = out.reshape(b, s, h * hd)
                 return qmatmul(out, p["wo"], policy), new_cache
-            k_full = dequantize(kc, k_scale, jnp.bfloat16)
-            v_full = dequantize(vc, v_scale, jnp.bfloat16)
+            k_full = dequantize(view(kc), view(k_scale), jnp.bfloat16)
+            v_full = dequantize(view(vc), view(v_scale), jnp.bfloat16)
         else:
-            kc = ragged_cache_update(kc, k, lengths, n_valid)
-            vc = ragged_cache_update(vc, v, lengths, n_valid)
-            k_full, v_full = kc, vc
+            kc = write(kc, k)
+            vc = write(vc, v)
+            k_full, v_full = view(kc), view(vc)
         out = chunked_attention(q, k_full, v_full, causal=True,
                                 q_offset=lengths, policy=policy,
                                 kv_valid_len=kv_valid)
@@ -344,12 +407,29 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
 
 
 def init_kv_cache(cfg, batch, max_len, policy=None, n_layers=None,
-                  dtype=jnp.bfloat16):
-    """Pre-allocated per-layer KV cache, stacked on a leading layer axis."""
+                  dtype=jnp.bfloat16, block_size=None, num_blocks=None):
+    """Pre-allocated per-layer KV cache, stacked on a leading layer axis.
+
+    Contiguous (default): one [batch, max_len] window per slot. Paged
+    (`block_size` set): a global block pool [num_blocks, block_size] with
+    no batch axis — rows address it through a per-slot block table (see
+    `model.init_cache`), so HBM scales with tokens actually cached, not
+    batch * worst-case length. `num_blocks` defaults to byte parity with
+    the contiguous layout."""
     n_layers = n_layers if n_layers is not None else cfg.n_layers
     kvh, hd = cfg.n_kv_heads, cfg.head_dim
     quant = policy is not None and policy.kv_cache is not None
     dt = jnp.int8 if quant else dtype
+    if block_size is not None:
+        nb = (num_blocks if num_blocks is not None
+              else batch * -(-max_len // block_size))
+        kc = jnp.zeros((n_layers, nb, block_size, kvh, hd), dt)
+        vc = jnp.zeros((n_layers, nb, block_size, kvh, hd), dt)
+        sshape = ((n_layers, nb, block_size, kvh, 1) if quant
+                  else (n_layers, 1, 1, kvh, 1))
+        ks = jnp.full(sshape, 1e-6, jnp.float32)
+        vs = jnp.full(sshape, 1e-6, jnp.float32)
+        return {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
     kc = jnp.zeros((n_layers, batch, max_len, kvh, hd), dt)
     vc = jnp.zeros((n_layers, batch, max_len, kvh, hd), dt)
     slen = max_len if quant else 1

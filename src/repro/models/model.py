@@ -20,8 +20,6 @@ path, possibly tied to the LM head) stay float.
 """
 from __future__ import annotations
 
-import functools
-import math
 from typing import Optional
 
 import jax
@@ -290,16 +288,32 @@ def loss_fn(cfg, params, batch, policy=None, shard=None, remat=True,
 # decode
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg, batch, max_len, policy=None, dtype=jnp.bfloat16):
+def init_cache(cfg, batch, max_len, policy=None, dtype=jnp.bfloat16,
+               kv_block_size=None, kv_blocks=None):
     """Serving cache for one decode stream set.
 
     `cache["lengths"]` is a per-request [batch] int32 vector — every row
     prefills, decodes, and finishes independently (ragged continuous
-    batching); there is no batch-wide position scalar."""
+    batching); there is no batch-wide position scalar.
+
+    `kv_block_size` switches attention families to the paged layout: KV
+    leaves become a global block pool [L, kv_blocks, block_size, KV, hd]
+    addressed through `cache["block_tables"]` [batch, MB] (MB = blocks
+    needed to cover max_len). Unallocated table entries are 0 — safe,
+    because every position they could resolve is masked by the row's
+    length. SSM state is a dense per-slot recurrent carry either way
+    (there is no sequence axis to page)."""
     cache = {}
+    if kv_blocks is not None and kv_block_size is None:
+        raise ValueError("kv_blocks requires kv_block_size (a pool size "
+                         "only makes sense for the paged layout)")
+    paged = kv_block_size is not None
     if cfg.family in ("dense", "moe", "vlm", "audio"):
-        cache["kv"] = init_kv_cache(cfg, batch, max_len, policy, dtype=dtype)
+        cache["kv"] = init_kv_cache(cfg, batch, max_len, policy, dtype=dtype,
+                                    block_size=kv_block_size,
+                                    num_blocks=kv_blocks)
     elif cfg.family == "ssm":
+        paged = False
         st, cv = ssm_lib.init_ssm_state(cfg, batch)
         cache["ssm"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), (st, cv))
@@ -310,29 +324,40 @@ def init_cache(cfg, batch, max_len, policy=None, dtype=jnp.bfloat16):
         # one KV cache per shared-attention application
         n_apps = cfg.n_layers // cfg.attn_every
         cache["kv"] = init_kv_cache(cfg, batch, max_len, policy,
-                                    n_layers=n_apps, dtype=dtype)
+                                    n_layers=n_apps, dtype=dtype,
+                                    block_size=kv_block_size,
+                                    num_blocks=kv_blocks)
+    if paged:
+        mb = -(-max_len // kv_block_size)
+        cache["block_tables"] = jnp.zeros((batch, mb), jnp.int32)
     cache["lengths"] = jnp.zeros((batch,), jnp.int32)
     return cache
 
 
 def _cache_batch_axis(key: str) -> int:
     # every family cache leaf is layer-stacked [L, B, ...] except the
-    # per-request length vector [B]
-    return 0 if key == "lengths" else 1
+    # per-request length and block-table vectors [B(, MB)]
+    return 0 if key in ("lengths", "block_tables") else 1
 
 
 def slice_cache_rows(cache, start, size: int = 1):
     """Per-request cache window: rows [start, start+size) of every leaf's
-    batch axis (serving engine: run a step on one slot's row only)."""
-    return {k: jax.tree.map(
+    batch axis (serving engine: run a step on one slot's row only). Paged
+    KV pools have no batch axis and are shared across rows: they pass
+    through whole, addressed by the sliced block-table rows."""
+    paged = "block_tables" in cache
+    return {k: v if (paged and k == "kv") else jax.tree.map(
         lambda a, ax=_cache_batch_axis(k): jax.lax.dynamic_slice_in_dim(
             a, start, size, axis=ax), v)
         for k, v in cache.items()}
 
 
 def update_cache_rows(cache, sub, start):
-    """Write a `slice_cache_rows` window back at row `start`."""
-    return {k: jax.tree.map(
+    """Write a `slice_cache_rows` window back at row `start`. A paged KV
+    pool is taken from `sub` wholesale — its scatter writes only touched
+    the blocks owned by the sliced rows."""
+    paged = "block_tables" in cache
+    return {k: sub[k] if (paged and k == "kv") else jax.tree.map(
         lambda a, u, ax=_cache_batch_axis(k):
         jax.lax.dynamic_update_slice_in_dim(a, u.astype(a.dtype), start,
                                             axis=ax), v, sub[k])
@@ -363,6 +388,7 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
     n_valid = n_valid.astype(jnp.int32)
     positions = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     new_cache = dict(cache)
+    block_tables = cache.get("block_tables")
 
     if cfg.family in ("dense", "moe", "vlm", "audio"):
         kv = cache["kv"]
@@ -372,7 +398,8 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             h, new_kv = attention(
                 bp["attn"], apply_norm(x, bp["attn_norm"], cfg.norm), cfg,
                 positions=positions, policy=policy,
-                cache=(kc, vc, ks, vs), lengths=lengths, n_valid=n_valid)
+                cache=(kc, vc, ks, vs), lengths=lengths, n_valid=n_valid,
+                block_tables=block_tables)
             x = x + h
             xin = apply_norm(x, bp["mlp_norm"], cfg.norm)
             if cfg.family == "moe":
@@ -428,7 +455,8 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             h, new_kv = attention(
                 sp["attn"], apply_norm(xin, sp["attn_norm"], cfg.norm), cfg,
                 positions=positions, policy=policy, cache=kvq,
-                lengths=lengths, n_valid=n_valid)
+                lengths=lengths, n_valid=n_valid,
+                block_tables=block_tables)
             x = x + h
             x = x + mlp(sp["mlp"], apply_norm(x, sp["mlp_norm"], cfg.norm),
                         cfg.act, policy)

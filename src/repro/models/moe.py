@@ -124,7 +124,8 @@ def moe_ffn(p, x, cfg, policy: Optional[PrecisionPolicy] = None,
             dp_size *= shard.mesh.shape[a]
         if g % dp_size == 0:
             def smap(fn, *args):
-                spec = lambda r: _P(dpx, *([None] * (r - 1)))
+                def spec(r):
+                    return _P(dpx, *([None] * (r - 1)))
                 return shard_map(
                     jax.vmap(fn), mesh=shard.mesh,
                     in_specs=tuple(spec(a.ndim) for a in args),

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,14 +58,20 @@ def init_opt_state(params, quantized: bool = False):
     paper's own quantization substrate) — 3.3x less state HBM; required to
     fit grok-1-314b training on 256 chips."""
     if not quantized:
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params),
                 "count": jnp.zeros((), jnp.int32)}
-    c8 = lambda p: jnp.zeros(p.shape, jnp.int8)
-    c16 = lambda p: jnp.zeros(p.shape, jnp.int16)
-    sc = lambda p: jnp.full(p.shape[:-1] + (1,) if p.ndim else (1,),
-                            1e-12, jnp.float32)
+    def c8(p):
+        return jnp.zeros(p.shape, jnp.int8)
+
+    def c16(p):
+        return jnp.zeros(p.shape, jnp.int16)
+
+    def sc(p):
+        return jnp.full(p.shape[:-1] + (1,) if p.ndim else (1,),
+                        1e-12, jnp.float32)
     return {"m_c": jax.tree.map(c8, params), "m_s": jax.tree.map(sc, params),
             "v_c": jax.tree.map(c16, params), "v_s": jax.tree.map(sc, params),
             "count": jnp.zeros((), jnp.int32)}
@@ -76,7 +81,8 @@ def opt_state_axes(axes_tree, quantized: bool = False):
     """Optimizer-state logical axes mirror the parameter axes."""
     if not quantized:
         return {"m": axes_tree, "v": axes_tree, "count": None}
-    is_leaf = lambda x: isinstance(x, tuple) or x is None
+    def is_leaf(x):
+        return isinstance(x, tuple) or x is None
     drop_last = jax.tree.map(
         lambda a: (a[:-1] + (None,)) if isinstance(a, tuple) and a else a,
         axes_tree, is_leaf=is_leaf)
@@ -119,8 +125,11 @@ def adamw_update(cfg: OptConfig, params, grads, state, step):
                       + cfg.weight_decay * p.astype(jnp.float32))
         return (p.astype(jnp.float32) - step_).astype(p.dtype), m2, v2
 
-    tup = lambda i: (lambda t: t[i])
-    is_tup = lambda t: isinstance(t, tuple)
+    def tup(i):
+        return lambda t: t[i]
+
+    def is_tup(t):
+        return isinstance(t, tuple)
 
     if not quantized:
         out = jax.tree.map(upd, params, grads, state["m"], state["v"])

@@ -21,6 +21,18 @@ released immediately and the next pending request starts prefilling into
 it mid-flight, with its position counter reset to 0 — stale cache above a
 row's length is masked per row, so slot reuse needs no cache zeroing.
 
+Paged KV mode (`kv_block_size`): instead of one contiguous max_len window
+per slot, attention caches live in a global block pool
+[L, kv_blocks, block_size, KV, hd] addressed through per-slot block
+tables, so cache HBM scales with tokens actually held, not
+slots x worst-case length. Admission reserves a request's worst-case
+block count (queueing FIFO when the pool can't cover it — never stalling
+an admitted request mid-flight); physical blocks are popped off a free
+list as the request's frontier crosses block boundaries and returned on
+release. Decode is bit-exact vs the contiguous layout: the gathered
+block view reconstructs the same masked cache every step. SSM state is a
+dense per-slot recurrent carry either way.
+
 Sampling is per-request: greedy / temperature / top-k from
 `Request.sampling`, with a per-request RNG key (folded per emitted token),
 so a request's sampled tokens are independent of whatever happens to be
@@ -53,14 +65,18 @@ from ..models import model as M
 _STEP_CACHE: dict = {}
 
 
-def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk):
-    key = (cfg, policy, mesh, max_slots, alloc, chunk)
+def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk,
+                    kv_block_size=None, kv_blocks=None):
+    key = (cfg, policy, mesh, max_slots, alloc, chunk, kv_block_size,
+           kv_blocks)
     if key not in _STEP_CACHE:
         prefill_fn, *_ = S.build_prefill_step(
             cfg, mesh, policy, with_cache=True, batch=max_slots,
-            max_len=alloc, chunk=chunk)
+            max_len=alloc, chunk=chunk, kv_block_size=kv_block_size,
+            kv_blocks=kv_blocks)
         decode_fn, *_ = S.build_serve_step(
-            cfg, mesh, policy, batch=max_slots, max_len=alloc, chunk=1)
+            cfg, mesh, policy, batch=max_slots, max_len=alloc, chunk=1,
+            kv_block_size=kv_block_size, kv_blocks=kv_blocks)
         _STEP_CACHE[key] = (jax.jit(prefill_fn, donate_argnums=(1,)),
                             jax.jit(decode_fn, donate_argnums=(1,)))
     return _STEP_CACHE[key]
@@ -113,13 +129,17 @@ class FinishedRequest:
 class _Slot:
     """Host-side state of one occupied decode slot."""
 
-    def __init__(self, request: Request, key, tick: int):
+    def __init__(self, request: Request, key, tick: int,
+                 blocks_need: int = 0):
         self.request = request
         self.key = key                       # per-request base PRNG key
         self.prefill_pos = 0                 # prompt tokens consumed
         self.generated: List[int] = []
         self.next_input: Optional[int] = None  # last sampled token
         self.admitted_tick = tick
+        self.cache_len = 0                   # tokens written to the cache
+        self.blocks_need = blocks_need       # worst-case paged reservation
+        self.blocks: List[int] = []          # pool blocks held (paged mode)
 
     @property
     def prompt_len(self) -> int:
@@ -143,7 +163,8 @@ class ServingEngine:
 
     def __init__(self, cfg, params, policy=None, max_slots: int = 4,
                  max_len: int = 256, prefill_chunk: int = 32, seed: int = 0,
-                 mesh=None):
+                 mesh=None, kv_block_size: Optional[int] = None,
+                 kv_blocks: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -152,15 +173,35 @@ class ServingEngine:
         self.prefill_chunk = prefill_chunk
         self.seed = seed
         self.mesh = mesh if mesh is not None else make_host_mesh()
+        if kv_blocks is not None and kv_block_size is None:
+            raise ValueError("kv_blocks requires kv_block_size (a pool size "
+                             "only makes sense for the paged layout)")
+        self.kv_block_size = kv_block_size
 
         # over-allocate by one chunk: a ragged write window [len, len+chunk)
         # must stay in bounds for every row with len < max_len (see
         # layers.ragged_cache_update)
         alloc = max_len + prefill_chunk
-        self.cache = M.init_cache(cfg, max_slots, alloc, policy)
+        self.cache = M.init_cache(cfg, max_slots, alloc, policy,
+                                  kv_block_size=kv_block_size,
+                                  kv_blocks=kv_blocks)
+        # paged mode: a request's KV lives in pool blocks its table points
+        # at, not a private max_len window. Admission reserves its
+        # worst-case block count (so an admitted request can always finish);
+        # physical blocks are popped off the free list on demand as its
+        # prefill/decode frontier crosses block boundaries.
+        self.paged = "block_tables" in self.cache
+        self._committed = 0          # worst-case blocks promised to slots
+        if self.paged:
+            self.num_blocks = int(self.cache["kv"]["k"].shape[1])
+            self._free: List[int] = list(range(self.num_blocks))
+            self.peak_blocks_used = 0
+            kv_blocks = self.num_blocks
 
         self._prefill, self._decode = _compiled_steps(
-            cfg, policy, self.mesh, max_slots, alloc, prefill_chunk)
+            cfg, policy, self.mesh, max_slots, alloc, prefill_chunk,
+            kv_block_size if self.paged else None,
+            kv_blocks if self.paged else None)
 
         self.slots: List[Optional[_Slot]] = [None] * max_slots
         self.pending: deque = deque()
@@ -174,6 +215,11 @@ class ServingEngine:
 
     # -- request lifecycle --------------------------------------------------
 
+    def _blocks_need(self, request: Request) -> int:
+        """Worst-case pool blocks this request can ever hold."""
+        bs = self.kv_block_size
+        return -(-(len(request.prompt) + request.max_new_tokens) // bs)
+
     def submit(self, request: Request) -> int:
         plen = len(request.prompt)
         if plen < 1:
@@ -185,6 +231,10 @@ class ServingEngine:
             raise ValueError(
                 f"prompt ({plen}) + max_new_tokens ({request.max_new_tokens})"
                 f" exceeds engine max_len ({self.max_len})")
+        if self.paged and self._blocks_need(request) > self.num_blocks:
+            raise ValueError(
+                f"request needs {self._blocks_need(request)} KV blocks but "
+                f"the pool only has {self.num_blocks}")
         if request.id is None:
             request.id = self._next_id
         self._next_id = max(self._next_id, request.id) + 1
@@ -202,17 +252,49 @@ class ServingEngine:
     def _admit(self):
         for b in range(self.max_slots):
             if self.slots[b] is None and self.pending:
-                req = self.pending.popleft()
-                self.slots[b] = _Slot(req, self._request_key(req), self.tick)
+                req = self.pending[0]
+                need = self._blocks_need(req) if self.paged else 0
+                if self.paged and self._committed + need > self.num_blocks:
+                    # pool exhausted: the request queues (FIFO — no
+                    # head-of-line skipping) until finished requests
+                    # return enough blocks for its worst case, which
+                    # guarantees an admitted request never stalls
+                    # mid-flight waiting for a block
+                    break
+                self.pending.popleft()
+                self.slots[b] = _Slot(req, self._request_key(req), self.tick,
+                                      blocks_need=need)
+                self._committed += need
                 # reset this row's position counter; stale KV above a row's
                 # length is masked per row, so the KV cache needs no zeroing
                 self.cache["lengths"] = self.cache["lengths"].at[b].set(0)
+                if self.paged:
+                    # hygiene: a fresh table row points at block 0 until
+                    # blocks are allocated (reads above the row's length
+                    # are masked either way)
+                    self.cache["block_tables"] = \
+                        self.cache["block_tables"].at[b].set(0)
                 if "ssm" in self.cache:
                     # SSM state is a recurrent carry, not a masked window —
                     # a reused slot must start from the zero state
                     self.cache["ssm"] = tuple(
                         a.at[:, b].set(jnp.zeros((), a.dtype))
                         for a in self.cache["ssm"])
+
+    def _ensure_blocks(self, b: int, upto: int):
+        """Grow slot b's block table to cover logical positions [0, upto):
+        pop blocks off the free list and write them into the table row."""
+        slot = self.slots[b]
+        need = -(-upto // self.kv_block_size)
+        while len(slot.blocks) < need:
+            if not self._free:      # unreachable under reservation admission
+                raise RuntimeError("KV block pool exhausted mid-flight")
+            blk = self._free.pop()
+            self.cache["block_tables"] = self.cache["block_tables"].at[
+                b, len(slot.blocks)].set(blk)
+            slot.blocks.append(blk)
+        self.peak_blocks_used = max(self.peak_blocks_used,
+                                    self.num_blocks - len(self._free))
 
     # -- one engine tick ----------------------------------------------------
 
@@ -260,10 +342,13 @@ class ServingEngine:
         for b, slot in enumerate(self.slots):
             if slot is not None and slot.prefilling:
                 tokens, take = self._prefill_block(slot)
+                if self.paged:
+                    self._ensure_blocks(b, slot.cache_len + take)
                 lg, self.cache = self._prefill(
                     self.params, self.cache, tokens,
                     jnp.asarray([take], jnp.int32), jnp.int32(b))
                 slot.prefill_pos += take
+                slot.cache_len += take
                 if not slot.prefilling:
                     sample_logits[b] = lg[0]
 
@@ -274,11 +359,15 @@ class ServingEngine:
         if dec_rows:
             n_valid = np.zeros((self.max_slots,), np.int32)
             n_valid[dec_rows] = 1
+            if self.paged:
+                for b in dec_rows:
+                    self._ensure_blocks(b, self.slots[b].cache_len + 1)
             lg, self.cache = self._decode(
                 self.params, self.cache, self._decode_block(dec_rows),
                 jnp.asarray(n_valid))
             for b in dec_rows:
                 sample_logits[b] = lg[b]
+                self.slots[b].cache_len += 1
 
         # 3) per-request sampling over every row that produced logits
         rows = sorted(sample_logits)
@@ -312,6 +401,12 @@ class ServingEngine:
                         finished_tick=self.tick))
                     self.prompt_tokens += slot.prompt_len
                     self.generated_tokens += len(slot.generated)
+                    if self.paged:
+                        # blocks go straight back to the free list; the
+                        # next occupant's masked view makes stale KV in
+                        # recycled blocks unreachable
+                        self._free.extend(slot.blocks)
+                        self._committed -= slot.blocks_need
                     self.slots[b] = None        # release: admit next tick
 
         self.busy_slot_ticks += sum(s is not None for s in self.slots) \
@@ -337,7 +432,13 @@ class ServingEngine:
 
     def stats(self) -> dict:
         util = self.busy_slot_ticks / max(self.total_slot_ticks, 1)
-        return {"ticks": self.tick,
-                "prompt_tokens": self.prompt_tokens,
-                "generated_tokens": self.generated_tokens,
-                "slot_utilization": util}
+        st = {"ticks": self.tick,
+              "prompt_tokens": self.prompt_tokens,
+              "generated_tokens": self.generated_tokens,
+              "slot_utilization": util}
+        if self.paged:
+            st["kv_blocks"] = self.num_blocks
+            st["kv_block_size"] = self.kv_block_size
+            st["peak_blocks_used"] = self.peak_blocks_used
+            st["free_blocks"] = len(self._free)
+        return st

@@ -1,10 +1,8 @@
 """CORDIC engine tests: float-structural vs numpy, bit-accurate vs
 float-structural, convergence domains, Pareto monotonicity."""
-import math
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

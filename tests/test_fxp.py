@@ -36,7 +36,8 @@ def test_code_dtypes():
 
 
 def test_ste_gradient_passes_through():
-    f = lambda x: jnp.sum(fxp.fake_quant_ste(x, "fxp8") ** 2)
+    def f(x):
+        return jnp.sum(fxp.fake_quant_ste(x, "fxp8") ** 2)
     x = jnp.array([0.5, -0.25, 0.9])
     g = jax.grad(f)(x)
     # STE: d/dx sum(q(x)^2) ~ 2*q(x)

@@ -1,6 +1,5 @@
 """Per-kernel tests: Pallas (interpret=True) vs pure-jnp oracles, sweeping
 shapes/dtypes/precisions, plus numerical quality vs the exact functions."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,230 @@
+"""Paged block-table KV cache: allocator edge cases (pool exhaustion ->
+queueing, free-list reuse without stale KV, block-boundary lengths) and
+the headline invariant — paged decode is bit-exact vs the contiguous
+cache for every cache family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PrecisionPolicy
+from repro.models import layers as L
+from repro.models import model as M
+from repro.serving import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(cfg):
+    return M.init_params(cfg, KEY, dtype=jnp.float32)
+
+
+def _prompt(i, plen, cfg):
+    key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(key, (plen,), 0, cfg.vocab)
+    return jax.random.normal(key, (plen, cfg.d_model), jnp.bfloat16)
+
+
+def _req(i, plen, cfg, gen=6, **kw):
+    return Request(prompt=_prompt(i, plen, cfg), max_new_tokens=gen, id=i,
+                   **kw)
+
+
+# ---------------------------------------------------------------------------
+# pool primitives (no engine)
+# ---------------------------------------------------------------------------
+
+def test_paged_cache_update_writes_through_block_table():
+    """Logical position p lands at pool[table[p // bs], p % bs]; tokens
+    past count scatter out of range and are dropped (idle rows no-op)."""
+    pool = jnp.zeros((4, 2, 1, 1))                     # NB=4, bs=2
+    bt = jnp.array([[2, 0], [1, 3]], jnp.int32)        # row0: 2,0; row1: 1,3
+    new = jnp.arange(1, 5, dtype=jnp.float32).reshape(2, 2, 1, 1)
+    # row0 writes 2 tokens at logical 1..2 (crosses into its 2nd block);
+    # row1 idles (count=0) — bit-untouched pool for its blocks
+    out = L.paged_cache_update(pool, new, bt,
+                               jnp.array([1, 0], jnp.int32),
+                               jnp.array([2, 0], jnp.int32))
+    got = np.asarray(out)[..., 0, 0]
+    want = np.zeros((4, 2))
+    want[2, 1] = 1.0        # logical pos 1 -> table slot 0 (block 2), off 1
+    want[0, 0] = 2.0        # logical pos 2 -> table slot 1 (block 0), off 0
+    np.testing.assert_array_equal(got, want)
+    # round trip: the gathered view puts logical pos p at view index p
+    view = L.gather_block_kv(out, bt)
+    np.testing.assert_array_equal(np.asarray(view)[0, 1:3, 0, 0], [1.0, 2.0])
+
+
+def test_gather_block_view_matches_contiguous_cache():
+    """Writing the same ragged window into a contiguous buffer and a paged
+    pool yields identical gathered views over the valid region."""
+    b, smax, kvh, hd, bs = 2, 8, 2, 3, 4
+    key = jax.random.PRNGKey(3)
+    new = jax.random.normal(key, (b, 3, kvh, hd))
+    start = jnp.array([2, 5], jnp.int32)
+    count = jnp.array([3, 2], jnp.int32)
+    buf = jnp.zeros((b, smax, kvh, hd))
+    cont = L.ragged_cache_update(buf, new, start, count)
+    pool = jnp.zeros((b * smax // bs, bs, kvh, hd))
+    bt = jnp.array([[0, 1], [2, 3]], jnp.int32)
+    view = L.gather_block_kv(L.paged_cache_update(pool, new, bt, start,
+                                                  count), bt)
+    np.testing.assert_array_equal(np.asarray(view), np.asarray(cont))
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness per cache family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2_5_14b", "mamba2_370m",
+                                  "zamba2_1p2b", "deepseek_moe_16b"])
+def test_paged_engine_matches_contiguous(arch):
+    """Greedy decode through the paged engine is bit-identical to the
+    contiguous engine for every cache family (SSM has no KV to page but
+    must run unperturbed through the same flags)."""
+    cfg = get_config(arch).reduced()
+    p = _params(cfg)
+    lens = [(0, 5), (1, 11), (2, 8), (3, 3)]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4,
+                            **kw)
+        done = eng.run([_req(i, pl, cfg) for i, pl in lens])
+        return {f.id: f.tokens for f in done}, eng
+
+    cont, _ = run()
+    paged, eng = run(kv_block_size=4)
+    assert cont == paged
+    assert eng.paged == (cfg.family != "ssm")
+
+
+def test_paged_engine_matches_contiguous_quantized_kv():
+    """The int8-codes + per-position-scales cache family stays bit-exact
+    under paging (codes AND scales page through the same block tables)."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    pol = PrecisionPolicy.flexpe(8)
+    p = _params(cfg)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, p, policy=pol, max_slots=2, max_len=24,
+                            prefill_chunk=4, **kw)
+        return {f.id: f.tokens
+                for f in eng.run([_req(0, 9, cfg), _req(1, 4, cfg),
+                                  _req(2, 12, cfg)])}
+
+    assert run() == run(kv_block_size=4)
+
+
+def test_request_length_exactly_at_block_boundary():
+    """prompt == k * block_size and prompt + gen == m * block_size: the
+    frontier crossing a boundary on the first decode token must allocate
+    the next block, and the run must match both the contiguous engine and
+    an off-boundary block size."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4,
+                            **kw)
+        done = eng.run([_req(0, 8, cfg, gen=4), _req(1, 4, cfg, gen=4)])
+        return {f.id: f.tokens for f in done}, eng
+
+    cont, _ = run()
+    exact, eng = run(kv_block_size=4)      # 8 = 2 blocks, 8+4 = 3 blocks
+    off, _ = run(kv_block_size=5)          # nothing aligns
+    assert cont == exact == off
+    # req 0 wrote plen + gen - 1 = 11 tokens -> crossed into its 3rd block
+    assert eng.stats()["peak_blocks_used"] >= 3
+
+
+# ---------------------------------------------------------------------------
+# allocator: exhaustion, queueing, free-list reuse
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_queues_admission():
+    """A pool too small for both requests admits the second only after the
+    first releases its blocks — it queues (no mid-flight stall, no error)
+    and still decodes exactly its solo tokens."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    # each request needs ceil((9 + 6) / 4) = 4 blocks; pool holds 6 ->
+    # admitting both (8) would overcommit, so the second must wait even
+    # though a slot row is free
+    eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, kv_blocks=6)
+    done = {f.id: f for f in eng.run([_req(0, 9, cfg), _req(1, 9, cfg)])}
+    assert done[1].admitted_tick > done[0].finished_tick - 1
+    assert eng.stats()["peak_blocks_used"] <= 6
+    assert eng.stats()["free_blocks"] == 6          # all returned
+    solo = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4,
+                         kv_block_size=4, kv_blocks=6)
+    assert solo.run([_req(1, 9, cfg)])[0].tokens == done[1].tokens
+
+
+def test_pool_exhaustion_mid_prefill_workload():
+    """Many requests through a pool that can't hold them all at once: the
+    allocator interleaves admission with chunked prefill of the slots
+    already holding blocks, and every request matches its contiguous run."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    lens = [(0, 11), (1, 7), (2, 9), (3, 5), (4, 12)]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, p, max_slots=3, max_len=24, prefill_chunk=4,
+                            **kw)
+        return {f.id: f.tokens
+                for f in eng.run([_req(i, pl, cfg) for i, pl in lens])}, eng
+
+    cont, _ = run()
+    paged, eng = run(kv_block_size=4, kv_blocks=9)   # < sum of all needs
+    assert cont == paged
+    assert eng.stats()["peak_blocks_used"] <= 9
+
+
+def test_single_request_larger_than_pool_rejected():
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, kv_blocks=2)
+    with pytest.raises(ValueError):      # needs 4 blocks, pool has 2
+        eng.submit(_req(0, 9, cfg, gen=6))
+    assert not eng.has_work()
+
+
+def test_block_free_list_reuse_leaves_no_stale_kv():
+    """Serial requests through one slot recycle the same physical blocks;
+    the successor must decode exactly its solo tokens (stale KV from the
+    previous occupant is unreachable through the new block table)."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    # pool exactly one request's worst case -> request 1 MUST reuse
+    # request 0's recycled blocks
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, kv_blocks=5)
+    serial = {f.id: f.tokens
+              for f in eng.run([_req(0, 12, cfg), _req(1, 4, cfg)])}
+    assert eng.stats()["peak_blocks_used"] <= 5
+    solo = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4,
+                         kv_block_size=4, kv_blocks=5)
+    assert solo.run([_req(1, 4, cfg)])[0].tokens == serial[1]
+
+
+def test_capacity_exceeds_contiguous_at_byte_parity():
+    """At the contiguous layout's byte budget, the paged engine holds
+    strictly more mixed-length requests in flight concurrently."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    slots, max_len, chunk, bs = 2, 24, 4, 4
+    budget_blocks = slots * -(-(max_len + chunk) // bs)   # parity: 14
+    eng = ServingEngine(cfg, p, max_slots=8, max_len=max_len,
+                        prefill_chunk=chunk, kv_block_size=bs,
+                        kv_blocks=budget_blocks)
+    for i in range(8):
+        eng.submit(_req(i, 4 + (i % 3) * 2, cfg, gen=2))
+    peak = 0
+    while eng.has_work():
+        eng.step()
+        peak = max(peak, sum(s is not None for s in eng.slots))
+    assert peak >= 2 * slots, peak

@@ -1,6 +1,5 @@
 """Fault-tolerance tests: checkpoint atomicity/restore, restart-on-failure,
 elastic reshard-on-load, straggler monitor, data pipeline determinism."""
-import os
 
 import jax
 import jax.numpy as jnp

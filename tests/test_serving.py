@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import PrecisionPolicy
 from repro.models import model as M
 from repro.serving import FinishedRequest, Request, SamplingParams, \
     ServingEngine

@@ -2,7 +2,6 @@
 safety nets, shape-aware activation constraints, input/cache spec trees."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -87,7 +86,7 @@ def test_cache_shardings_cover_tree(mesh):
 
 
 def test_dryrun_collective_parser():
-    from repro.launch.dryrun import _type_bytes, parse_collectives
+    from repro.launch.dryrun import parse_collectives
     hlo = """
   %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=...
   %ar.1 = f32[256,256]{1,0} all-reduce(%y), channel_id=2
