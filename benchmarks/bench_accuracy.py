@@ -74,7 +74,8 @@ def run(csv_rows):
     drop4 = (accs["exact"] - accs["fxp4"]) * 100
     print("# Fig. 5 — accuracy with CORDIC MAC+SST (synthetic CIFAR-100 "
           "stand-in):")
-    print(f"  exact fp32: {accs['exact']:.3f}   flexpe-fxp8: {accs['fxp8']:.3f} "
+    print(f"  exact fp32: {accs['exact']:.3f}   "
+          f"flexpe-fxp8: {accs['fxp8']:.3f} "
           f"(drop {drop8:+.2f}%)   flexpe-fxp4: {accs['fxp4']:.3f} "
           f"(drop {drop4:+.2f}%)   [paper: <2% loss]")
     us = (time.time() - t0) * 1e6

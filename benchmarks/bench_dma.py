@@ -7,7 +7,8 @@ from repro.core.scheduler import ALEXNET, LENET5, VGG16, network_dma
 
 
 def run(csv_rows):
-    print("# §IV-A — DMA read reductions (SIMD weight-stationary scheduler):")
+    print("# §IV-A — DMA read reductions "
+          "(SIMD weight-stationary scheduler):")
     for name, net, bits, paper in (
             ("vgg16", VGG16, 8, "62x/371x"),
             ("alexnet", ALEXNET, 4, "10x/214x"),

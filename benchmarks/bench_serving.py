@@ -10,7 +10,7 @@ cache additionally replaces the per-slot contiguous max_len window with a
 global block pool + per-slot block tables, so the cache byte budget caps
 tokens actually held, not slots x worst-case length.
 
-Three measurements:
+Four measurements:
   * tok/s — static driver vs engine (contiguous) vs engine (paged). The
     paged engine must match contiguous throughput (same compute, gathered
     view) while decoding bit-identical tokens.
@@ -20,10 +20,16 @@ Three measurements:
     the peak number of requests simultaneously in flight. Mixed lengths
     are the point: reservation is per-request worst case, far below the
     global max_len.
+  * the shared-system-prompt workload — every request carries the same
+    system prefix; the prefix-cached engine must compute at least 2x
+    fewer prefill tokens than the cold paged engine (matched blocks are
+    shared copy-on-write, not recomputed) and improve mean TTFT, while
+    decoding bit-identical tokens.
   * a BENCH_serving.json artifact for CI's perf-regression gate
     (`benchmarks/check_regression.py`): machine-portable ratios (engine
-    vs static speedup, paged-vs-contiguous overhead, capacity ratio) plus
-    the absolute tok/s for human eyes.
+    vs static speedup, paged-vs-contiguous overhead, capacity ratio,
+    prefix-cache prefill reduction) plus the absolute tok/s for human
+    eyes.
 """
 from __future__ import annotations
 
@@ -96,6 +102,48 @@ def _engine_driver(cfg, params, policy, reqs, **kw):
     return st["prompt_tokens"] + st["generated_tokens"], st, eng
 
 
+SHARED_PREFIX = 24          # 3 full KV blocks of system prompt
+TAIL_LENS = (4, 6, 8, 2, 5, 7, 3, 6)
+
+
+def _shared_requests(cfg):
+    """Every request = the same system prompt + a unique short tail."""
+    system = jax.random.randint(jax.random.PRNGKey(7), (SHARED_PREFIX,), 0,
+                                cfg.vocab)
+    reqs = []
+    for i, tl in enumerate(TAIL_LENS):
+        key = jax.random.fold_in(jax.random.PRNGKey(2), i)
+        tail = jax.random.randint(key, (tl,), 0, cfg.vocab)
+        reqs.append(Request(prompt=jnp.concatenate([system, tail]),
+                            max_new_tokens=6, id=i))
+    return reqs
+
+
+def _prefix_experiment(cfg, params, policy):
+    """Shared-system-prompt workload, paged engine with and without the
+    prefix cache. Returns (cold stats+ttft, warm stats+ttft); tokens must
+    match bit-exactly and the warm run must compute >=2x fewer prefill
+    tokens (matched blocks are shared, not recomputed)."""
+
+    def drive(prefix_cache):
+        eng = ServingEngine(cfg, params, policy=policy, max_slots=2,
+                            max_len=SHARED_PREFIX + max(TAIL_LENS) + 8,
+                            prefill_chunk=8, kv_block_size=8,
+                            prefix_cache=prefix_cache)
+        done = eng.run(_shared_requests(cfg))
+        st = eng.stats()
+        st["ttft_mean"] = sum(f.ttft_s for f in done) / len(done)
+        return {f.id: f.tokens for f in done}, st
+
+    drive(False)                                  # warm the compile caches
+    drive(True)
+    cold_toks, cold = drive(False)
+    warm_toks, warm = drive(True)
+    assert cold_toks == warm_toks, (
+        "prefix-cached decode diverged from the cold paged run")
+    return cold, warm
+
+
 def _capacity_at_budget(cfg, params, policy):
     """Peak concurrent requests under the contiguous layout's byte budget.
 
@@ -144,6 +192,10 @@ def run(rows, json_path=None):
     dt_p = time.time() - t0
 
     peak, stc = _capacity_at_budget(cfg, params, policy)
+    pfx_cold, pfx_warm = _prefix_experiment(cfg, params, policy)
+    prefill_reduction = (pfx_cold["prefill_tokens_computed"]
+                         / max(pfx_warm["prefill_tokens_computed"], 1))
+    ttft_ratio = pfx_cold["ttft_mean"] / max(pfx_warm["ttft_mean"], 1e-9)
 
     tps_s = useful_s / dt_s
     tps_e = useful_e / dt_e
@@ -162,6 +214,14 @@ def run(rows, json_path=None):
           f"({stc['kv_blocks']} blocks x {KV_BLOCK}): "
           f"{peak} concurrent requests paged vs {SLOTS} contiguous "
           f"({peak / SLOTS:.1f}x)")
+    print(f"shared-system-prompt ({SHARED_PREFIX} tokens x "
+          f"{len(TAIL_LENS)} requests): prefill tokens "
+          f"{pfx_cold['prefill_tokens_computed']} cold -> "
+          f"{pfx_warm['prefill_tokens_computed']} prefix-cached "
+          f"({prefill_reduction:.1f}x fewer), TTFT "
+          f"{pfx_cold['ttft_mean'] * 1e3:.1f} -> "
+          f"{pfx_warm['ttft_mean'] * 1e3:.1f} ms ({ttft_ratio:.2f}x), "
+          f"{pfx_warm['cow_copies']} CoW forks")
     rows.append(("serving_static_tok_s", dt_s / useful_s * 1e6,
                  f"{tps_s:.1f} tok/s"))
     rows.append(("serving_engine_tok_s", dt_e / useful_e * 1e6,
@@ -171,6 +231,10 @@ def run(rows, json_path=None):
     rows.append(("serving_paged_tok_s", dt_p / useful_p * 1e6,
                  f"{tps_p:.1f} tok/s "
                  f"capacity={peak}/{SLOTS} slots at parity bytes"))
+    rows.append(("serving_prefix_ttft", pfx_warm["ttft_mean"] * 1e6,
+                 f"prefill tokens {pfx_warm['prefill_tokens_computed']} vs "
+                 f"{pfx_cold['prefill_tokens_computed']} cold "
+                 f"({prefill_reduction:.1f}x fewer), ttft {ttft_ratio:.2f}x"))
     if json_path:
         metrics = {
             # absolute numbers (machine-dependent, reported for humans)
@@ -183,6 +247,10 @@ def run(rows, json_path=None):
             "capacity_contiguous": SLOTS,
             "capacity_paged": peak,
             "capacity_ratio": round(peak / SLOTS, 4),
+            # prefix cache: prefill-token reduction is a scheduling
+            # invariant (deterministic), the TTFT ratio is wall clock
+            "prefix_prefill_reduction": round(prefill_reduction, 4),
+            "prefix_ttft_ratio": round(ttft_ratio, 4),
             "slot_utilization": round(st["slot_utilization"], 4),
         }
         with open(json_path, "w") as f:

@@ -28,9 +28,10 @@ def run(csv_rows):
     util = gops / (2 * 64 * 8 * arr8.freq_hz / 1e9)  # vs peak fxp8 rate
     print(f"  vgg16@fxp8 (cycle-model upper bound): {gops:6.1f} GOPS  "
           f"{gops_w:5.2f} GOPS/W at util {util:4.2f}")
+    paper_util = (_PAPER_GOPS_W * _PAPER_POWER_W
+                  / (2 * 64 * 8 * arr8.freq_hz / 1e9))
     print(f"  paper Table VIII (measured FPGA system, incl. DMA stalls/host):"
-          f" {_PAPER_GOPS_W} GOPS/W -> implies util "
-          f"{_PAPER_GOPS_W * _PAPER_POWER_W / (2 * 64 * 8 * arr8.freq_hz / 1e9):5.3f};"
+          f" {_PAPER_GOPS_W} GOPS/W -> implies util {paper_util:5.3f};"
           f" the model bounds it from above, precision SCALING (4/8/16/32)"
           f" matches the paper's 16/8/4/1 law")
     csv_rows.append(("systolic/vgg16/fxp8", secs * 1e6,

@@ -33,7 +33,8 @@ def run(csv_rows):
         ratio = base / cyc
         print(f"  {p:6s} relative throughput {ratio:5.1f}x  "
               f"(paper: {dict(fxp4=16, fxp8=8, fxp16=4, fxp32=1)[p]}x)  "
-              f"{perf.throughput_gops:8.1f} GOPS  {perf.gops_per_watt:6.1f} GOPS/W")
+              f"{perf.throughput_gops:8.1f} GOPS  "
+              f"{perf.gops_per_watt:6.1f} GOPS/W")
         csv_rows.append((f"throughput/{p}", perf.cycles / arr.freq_hz * 1e6,
                          f"rel={ratio:.2f}x;gops={perf.throughput_gops:.1f}"))
     it = FlexPEArray(8, "fxp8", mode="iterative").gemm_cycles(512, 512, 512)

@@ -7,12 +7,14 @@ checked-in baseline and fail on steady-state throughput regressions.
 Gated metrics are the machine-portable ones: `speedup_vs_static` and
 `paged_speedup_vs_static` (engine steady-state tok/s normalised by the
 static-driver tok/s measured in the SAME run — a hosted runner being
-slow cancels out of the ratio) and `capacity_ratio` (paged concurrent
-slots per contiguous slot at byte parity — a scheduling invariant, fully
-deterministic). A gated metric more than `tolerance` below its baseline
-fails the job. Absolute tok/s is printed for trend-watching and gated
-only under --gate-absolute (off in CI: hosted-runner wall clock is not a
-stable reference).
+slow cancels out of the ratio), `capacity_ratio` (paged concurrent
+slots per contiguous slot at byte parity) and
+`prefix_prefill_reduction` (cold / prefix-cached prefill tokens on the
+shared-system-prompt workload) — the latter two are scheduling
+invariants, fully deterministic. A gated metric more than `tolerance`
+below its baseline fails the job. Absolute tok/s is printed for
+trend-watching and gated only under --gate-absolute (off in CI:
+hosted-runner wall clock is not a stable reference).
 
 After an intentional perf change, refresh the baseline with
     PYTHONPATH=src python benchmarks/bench_serving.py \
@@ -25,8 +27,10 @@ import argparse
 import json
 import sys
 
-GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio")
-INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s")
+GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio",
+         "prefix_prefill_reduction")
+INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
+                 "prefix_ttft_ratio")
 
 
 def main(argv=None) -> int:

@@ -4,12 +4,14 @@ smoke step (previously two hand-rolled `repro.launch.serve` invocations).
     PYTHONPATH=src python benchmarks/ci_smoke.py --backend reference
     PYTHONPATH=src python benchmarks/ci_smoke.py --backend pallas-interpret
 
-Each run drives the continuous-batching engine twice over the same
-mixed-length workload — once with the contiguous per-slot cache, once
-with the paged block-pool cache (`--kv-block-size`) — and fails if the
-paged run's greedy tokens differ from the contiguous run's (the paged
-layout must be bit-exact, not just plausible). Backend choice scales the
-workload down for the slower interpreted Pallas kernels.
+Each run drives the continuous-batching engine over the same mixed-length
+workload with a shared system prompt, three ways: contiguous per-slot
+cache, paged block-pool cache (`--kv-block-size`), and paged with
+cross-request prefix caching (`--prefix-cache`, copy-on-write block
+sharing). It fails if any pair of runs disagrees on greedy tokens — the
+paged layout AND prefix sharing must be bit-exact, not just plausible.
+Backend choice scales the workload down for the slower interpreted Pallas
+kernels.
 """
 from __future__ import annotations
 
@@ -18,14 +20,14 @@ import sys
 
 from repro.launch import serve
 
-# (requests, slots, prompt_len, gen, prefill_chunk) per backend — the
-# interpreted Pallas kernels are ~10x slower on CPU, so they smoke a
-# smaller workload (same shapes class, same code paths)
+# (requests, slots, prompt_len, gen, prefill_chunk, shared_prefix) per
+# backend — the interpreted Pallas kernels are ~10x slower on CPU, so they
+# smoke a smaller workload (same shapes class, same code paths)
 WORKLOADS = {
-    "reference": (6, 3, 12, 6, 8),
-    "pallas": (4, 2, 8, 4, 4),
-    "pallas-interpret": (4, 2, 8, 4, 4),
-    "auto": (4, 2, 8, 4, 4),
+    "reference": (6, 3, 12, 6, 8, 8),
+    "pallas": (4, 2, 8, 4, 4, 4),
+    "pallas-interpret": (4, 2, 8, 4, 4, 4),
+    "auto": (4, 2, 8, 4, 4, 4),
 }
 
 
@@ -36,27 +38,49 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-block-size", type=int, default=4)
     args = ap.parse_args(argv)
 
-    n, slots, plen, gen, chunk = WORKLOADS[args.backend]
+    n, slots, plen, gen, chunk, shared = WORKLOADS[args.backend]
     base = ["--arch", args.arch, "--reduced", "--requests", str(n),
             "--slots", str(slots), "--prompt-len", str(plen), "--mixed",
             "--gen", str(gen), "--prefill-chunk", str(chunk),
+            "--shared-prefix", str(shared),
             "--policy", "flexpe-fxp8", "--backend", args.backend]
+    paged_args = base + ["--kv-block-size", str(args.kv_block_size)]
 
     print(f"== contiguous KV ({args.backend}) ==")
     contiguous = serve.main(base)
     print(f"== paged KV, block size {args.kv_block_size} "
           f"({args.backend}) ==")
-    paged = serve.main(base + ["--kv-block-size", str(args.kv_block_size)])
+    paged = serve.main(paged_args)
+    print(f"== paged KV + prefix cache ({args.backend}) ==")
+    cached = serve.main(paged_args + ["--prefix-cache"])
 
-    cont = {f.id: f.tokens for f in contiguous}
-    page = {f.id: f.tokens for f in paged}
-    if cont != page:
-        bad = [i for i in cont if cont[i] != page.get(i)]
-        print(f"FAIL: paged decode diverged from contiguous for request(s) "
-              f"{bad}", file=sys.stderr)
+    runs = {"contiguous": {f.id: f.tokens for f in contiguous},
+            "paged": {f.id: f.tokens for f in paged},
+            "prefix-cache": {f.id: f.tokens for f in cached}}
+    ok = True
+    for name, toks in runs.items():
+        if name == "contiguous":
+            continue
+        if toks != runs["contiguous"]:
+            bad = [i for i in runs["contiguous"]
+                   if runs["contiguous"][i] != toks.get(i)]
+            print(f"FAIL: {name} decode diverged from contiguous for "
+                  f"request(s) {bad}", file=sys.stderr)
+            ok = False
+    if not ok:
         return 1
-    print(f"smoke OK: {len(cont)} requests, paged == contiguous bit-exact "
-          f"({args.backend})")
+    reused = sum(f.prefix_hit_tokens for f in cached)
+    # sharing happens at block granularity: only demand hits when the
+    # shared prefix actually covers at least one full block (a custom
+    # --kv-block-size larger than the workload's prefix legitimately
+    # matches nothing while still decoding bit-exactly)
+    if shared >= args.kv_block_size and reused <= 0:
+        print("FAIL: prefix cache matched zero prompt tokens on the "
+              "shared-prefix workload", file=sys.stderr)
+        return 1
+    print(f"smoke OK: {len(runs['contiguous'])} requests, prefix-cache == "
+          f"paged == contiguous bit-exact, {reused} prompt tokens served "
+          f"from the prefix cache ({args.backend})")
     return 0
 
 

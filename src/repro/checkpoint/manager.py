@@ -59,7 +59,8 @@ def _flatten(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep_n: int = 3,
+                 async_save: bool = True):
         self.dir = directory
         self.keep_n = keep_n
         self.async_save = async_save

@@ -50,7 +50,8 @@ def backend(name: str) -> Iterator[None]:
     routes every policy op (qmatmul / act / softmax) traced inside the block
     through the named backend, regardless of ``policy.backend``."""
     if name not in BACKENDS:
-        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {BACKENDS}")
     _OVERRIDE.append(name)
     try:
         yield
@@ -70,7 +71,8 @@ def resolve(policy_backend: Optional[str]) -> str:
     compile for CPU — interpret mode is the same kernels, validated)."""
     name = current_override() or policy_backend or "reference"
     if name not in BACKENDS:
-        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {BACKENDS}")
     if name == "auto":
         name = "pallas"
     if name == "pallas" and jax.default_backend() != "tpu":

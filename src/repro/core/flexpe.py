@@ -110,7 +110,8 @@ class FlexPEArray:
         if self.mode == "iterative":
             per_cycle /= lr_stages
         tiles = -(-m // self.n) * -(-n // self.n)
-        fill = tiles * (2 * self.n + (lr_stages if self.mode == "pipelined" else 0))
+        fill = tiles * (2 * self.n
+                        + (lr_stages if self.mode == "pipelined" else 0))
         return macs / per_cycle + (fill if include_fill else 0)
 
     def gemm_perf(self, m: int, k: int, n: int) -> ArrayPerf:

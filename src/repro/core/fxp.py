@@ -23,7 +23,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "FxPFormat", "FXP4", "FXP8", "FXP12", "FXP16", "FXP24", "FXP32",
-    "FORMATS", "quantize", "dequantize", "fake_quant", "fake_quant_ste", "code_dtype",
+    "FORMATS", "quantize", "dequantize", "fake_quant", "fake_quant_ste",
+    "code_dtype",
     "dynamic_scale", "round_half_even",
 ]
 
@@ -108,7 +109,8 @@ def dequantize(codes: jax.Array, scale: jax.Array, dtype=jnp.float32):
     return (codes.astype(jnp.float32) * scale).astype(dtype)
 
 
-def fake_quant(x: jax.Array, fmt: FxPFormat, scale=None, axis=None) -> jax.Array:
+def fake_quant(x: jax.Array, fmt: FxPFormat, scale=None,
+               axis=None) -> jax.Array:
     """Snap x to the FxP grid (no gradient definition)."""
     codes, s = quantize(x, fmt, scale=scale, axis=axis)
     return dequantize(codes, s, dtype=x.dtype)

@@ -40,7 +40,8 @@ def af_error(af: str, bits: int, hr_stages: int, lv_stages: int,
     """MAE/MSE of the CORDIC AF vs numpy, paper's Monte-Carlo protocol."""
     rng = np.random.default_rng(seed)
     n = n_samples or MC_SAMPLES(bits)
-    x = rng.uniform(-input_range, input_range, size=(max(n, 8),)).astype(np.float32)
+    x = rng.uniform(-input_range, input_range,
+                    size=(max(n, 8),)).astype(np.float32)
     fmt = FORMATS[f"fxp{bits}"]
     xq = np.asarray(fake_quant(jnp.asarray(x), fmt))
     if af == "sigmoid":
@@ -50,7 +51,8 @@ def af_error(af: str, bits: int, hr_stages: int, lv_stages: int,
         ref = np.tanh(xq.astype(np.float64))
         got = np.asarray(cordic_tanh(jnp.asarray(xq), hr_stages, lv_stages))
     elif af == "softmax":
-        x2 = xq.reshape(-1, 8) if xq.size % 8 == 0 else xq[: xq.size // 8 * 8].reshape(-1, 8)
+        x2 = (xq.reshape(-1, 8) if xq.size % 8 == 0
+              else xq[: xq.size // 8 * 8].reshape(-1, 8))
         e = np.exp(x2.astype(np.float64))
         ref = e / e.sum(-1, keepdims=True)
         got = np.asarray(cordic_softmax(jnp.asarray(x2), hr_stages, lv_stages))

@@ -122,7 +122,8 @@ class PrecisionPolicy:
 
     def softmax(self, x: jax.Array, axis: int = -1) -> jax.Array:
         if self.attn_softmax != "cordic":
-            return flex_af(x, "softmax", precision=None, impl="exact", axis=axis)
+            return flex_af(x, "softmax", precision=None, impl="exact",
+                           axis=axis)
         be = self.resolved_backend()
         if _is_pallas(be) and axis in (-1, x.ndim - 1):
             return _dispatch().softmax(x, self, backend=be, axis=axis)

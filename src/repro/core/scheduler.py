@@ -41,8 +41,12 @@ I_BUFFER_BYTES = 384 * 1024  # (paper: 62x / 371x); VC707 BRAM scale
 @dataclasses.dataclass(frozen=True)
 class ConvLayer:
     name: str
-    h: int; w: int; c: int          # input fmap
-    k: int; r: int = 3; s: int = 3  # out channels, kernel
+    h: int                          # input fmap height
+    w: int
+    c: int
+    k: int                          # out channels
+    r: int = 3                      # kernel
+    s: int = 3
     stride: int = 1
     pad: int = 1
 

@@ -14,7 +14,8 @@ def cordic_af_ref(x: jax.Array, af: str, hr_stages: int = 4,
     if af == "relu":
         return jnp.maximum(xf, 0.0)
     if af == "exp":
-        return cordic.extended_exp_float(xf, hr_stages, repeat_iters=repeat_iters)
+        return cordic.extended_exp_float(xf, hr_stages,
+                                         repeat_iters=repeat_iters)
     e = cordic.extended_exp_float(-jnp.abs(xf), hr_stages,
                                   repeat_iters=repeat_iters)
     if af in ("sigmoid", "silu"):
@@ -24,7 +25,8 @@ def cordic_af_ref(x: jax.Array, af: str, hr_stages: int = 4,
     if af == "tanh":
         t = cordic.extended_exp_float(-2.0 * jnp.abs(xf), hr_stages,
                                       repeat_iters=repeat_iters)
-        return jnp.sign(xf) * cordic.lv_divide_float(1.0 - t, 1.0 + t, lv_stages)
+        return jnp.sign(xf) * cordic.lv_divide_float(1.0 - t, 1.0 + t,
+                                                     lv_stages)
     raise ValueError(af)
 
 

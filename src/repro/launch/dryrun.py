@@ -140,8 +140,8 @@ def dryrun_cell(arch: str, shape: str, *, multi_pod: bool = False,
     # so these f32 stacks do not exist on the target. Quantify them:
     cpu_artifact = 0
     seen = set()
-    for mm in re.finditer(r'f32\[(' + str(cfg.n_layers)
-                          + r'),([\d,]+)\]', hlo_txt):
+    for mm in re.finditer(r"f32\[(" + str(cfg.n_layers)
+                          + r"),([\d,]+)\]", hlo_txt):
         dims = (mm.group(1) + "," + mm.group(2))
         if dims in seen:
             continue

@@ -18,6 +18,14 @@ CORDIC kernels), pallas-interpret, or auto. Any non-reference backend
 first runs `quantize_params` model surgery, so decode moves packed integer
 weight codes HBM→VMEM instead of re-fake-quantizing bf16 weights every
 step — the paper's SIMD storage win at serving time.
+
+`--prefix-cache` (requires `--kv-block-size`) turns on cross-request
+prefix caching over the paged block pool: full blocks of prompt tokens
+are chain-hashed and shared copy-on-write, so requests with a common
+system prompt (`--shared-prefix N` prepends one to every generated
+request) skip prefill for the matched blocks and share their physical KV.
+Decode stays bit-exact vs the unshared paged and contiguous layouts —
+`benchmarks/ci_smoke.py` gates that on every CI run.
 """
 from __future__ import annotations
 
@@ -46,17 +54,27 @@ def prepare_serving_params(params, policy, packed=None):
 
 
 def make_requests(cfg, n, prompt_len, gen, mixed=False, temp=0.0, top_k=0,
-                  seed=0):
-    """n requests; `mixed` varies prompt lengths across [plen/2, plen]."""
+                  seed=0, shared_prefix=0):
+    """n requests; `mixed` varies prompt lengths across [plen/2, plen];
+    `shared_prefix` prepends a common system prompt of that many tokens to
+    every request (the prefix-cache workload)."""
+    skey = jax.random.PRNGKey(seed + 1000)
+    if cfg.input_mode == "tokens":
+        system = jax.random.randint(skey, (shared_prefix,), 0, cfg.vocab)
+    else:
+        system = jax.random.normal(skey, (shared_prefix, cfg.d_model),
+                                   jnp.bfloat16)
     reqs = []
     for i in range(n):
-        plen = max(1, prompt_len - (i % 4) * (prompt_len // 8)) if mixed \
-            else prompt_len
+        plen = (max(1, prompt_len - (i % 4) * (prompt_len // 8))
+                if mixed else prompt_len)
         key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), i)
         if cfg.input_mode == "tokens":
             prompt = jax.random.randint(key, (plen,), 0, cfg.vocab)
         else:
             prompt = jax.random.normal(key, (plen, cfg.d_model), jnp.bfloat16)
+        if shared_prefix:
+            prompt = jnp.concatenate([system, prompt])
         reqs.append(Request(prompt=prompt, max_new_tokens=gen,
                             sampling=SamplingParams(temperature=temp,
                                                     top_k=top_k)))
@@ -81,6 +99,13 @@ def main(argv=None):
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="paged KV cache: pool size in blocks (0 = byte "
                          "parity with the contiguous layout)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix caching over the paged "
+                         "pool (copy-on-write block sharing; requires "
+                         "--kv-block-size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common system prompt of N tokens to "
+                         "every request (prefix-cache workload)")
     ap.add_argument("--policy", default="flexpe-fxp8")
     ap.add_argument("--backend", default="reference", choices=list(BACKENDS),
                     help="kernel backend for qmatmul/act/softmax; any "
@@ -110,13 +135,15 @@ def main(argv=None):
                   f"({fb / max(qb, 1):.1f}x reduction)")
         engine = ServingEngine(
             cfg, params, policy=policy, max_slots=args.slots,
-            max_len=args.prompt_len + args.gen,
+            max_len=args.prompt_len + args.shared_prefix + args.gen,
             prefill_chunk=args.prefill_chunk, seed=args.seed, mesh=mesh,
             kv_block_size=args.kv_block_size or None,
-            kv_blocks=args.kv_blocks or None)
+            kv_blocks=args.kv_blocks or None,
+            prefix_cache=args.prefix_cache)
         reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
                              mixed=args.mixed, temp=args.temp,
-                             top_k=args.top_k, seed=args.seed)
+                             top_k=args.top_k, seed=args.seed,
+                             shared_prefix=args.shared_prefix)
         t0 = time.time()
         for r in reqs:
             engine.submit(r)
@@ -137,6 +164,12 @@ def main(argv=None):
     if engine.paged:
         print(f"paged KV: {st['kv_blocks']} blocks x {st['kv_block_size']} "
               f"tokens, peak in use {st['peak_blocks_used']}")
+    if "prefix_cache" in st:
+        pc = st["prefix_cache"]
+        print(f"prefix cache: {st['prefix_tokens_reused']} prompt tokens "
+              f"reused ({st['prefill_tokens_computed']} computed), "
+              f"{pc['hits']} block hits, {pc['evictions']} evictions, "
+              f"{st['cow_copies']} CoW forks")
     return finished
 
 

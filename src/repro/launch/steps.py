@@ -261,8 +261,8 @@ def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
         c_shard = cache_shardings(cfg, rules, specs["cache"], b)
         rep = NamedSharding(mesh, P())
         out_shardings = (NamedSharding(mesh, P(None, "model")), c_shard)
-        return prefill_step, p_shard, specs, \
-            (p_shard, c_shard, rep, rep, rep), out_shardings
+        return (prefill_step, p_shard, specs,
+                (p_shard, c_shard, rep, rep, rep), out_shardings)
     rules = MeshRules(mesh, fsdp=fsdp)
     params_specs = model_state_specs(cfg, with_opt=False)
     p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
@@ -309,5 +309,5 @@ def build_serve_step(cfg, mesh, policy, fsdp: bool = False,
         return logits[:, -1, :], new_cache
 
     out_shardings = (NamedSharding(mesh, P(dp, "model")), c_shard)
-    return serve_step, p_shard, specs, (p_shard, c_shard, t_shard, n_shard), \
-        out_shardings
+    return (serve_step, p_shard, specs,
+            (p_shard, c_shard, t_shard, n_shard), out_shardings)

@@ -38,7 +38,8 @@ from ..core.precision import PrecisionPolicy, qmatmul
 
 def dense_init(key, d_in, d_out, dtype=jnp.bfloat16, scale=None):
     scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
-    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -332,7 +333,11 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
     scatter into the current block only (`paged_cache_update`); attention
     runs over the gathered per-row view (`gather_block_kv`), whose stale /
     unallocated tail is masked exactly like the contiguous cache's — the
-    two layouts are bit-identical in what they compute.
+    two layouts are bit-identical in what they compute. Several rows may
+    point at the SAME physical block (prefix sharing): that is safe
+    because a row only ever writes at [lengths, lengths+n_valid), and the
+    engine copy-on-writes any shared block before a row's write window
+    reaches it.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -356,7 +361,8 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
         if n_valid is None:
             n_valid = jnp.full((b,), s, jnp.int32)
         kv_valid = lengths + n_valid                       # [B]
-        kq_fmt = FORMATS[policy.kv_cache] if (policy and policy.kv_cache) else None
+        kq_fmt = (FORMATS[policy.kv_cache]
+                  if (policy and policy.kv_cache) else None)
         paged = block_tables is not None
         if paged:
             def write(buf, new):

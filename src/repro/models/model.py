@@ -20,6 +20,7 @@ path, possibly tied to the LM head) stay float.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -226,7 +227,8 @@ def forward(cfg, params, batch, policy: Optional[PrecisionPolicy] = None,
         n_groups = cfg.n_layers // per
         rest = cfg.n_layers - n_groups * per
         grouped = jax.tree.map(
-            lambda a: a[: n_groups * per].reshape((n_groups, per) + a.shape[1:]),
+            lambda a: a[: n_groups * per].reshape(
+                (n_groups, per) + a.shape[1:]),
             params["blocks"])
         tail = jax.tree.map(lambda a: a[n_groups * per:], params["blocks"])
 
@@ -364,6 +366,33 @@ def update_cache_rows(cache, sub, start):
         for k, v in cache.items()}
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_pool_blocks(cache, src, dst):
+    """Fork physical KV pool blocks: pool[:, dst[i]] <- pool[:, src[i]] for
+    every paged KV leaf (codes AND per-position scales), all layers in one
+    dispatch. This is the serving engine's copy-on-write primitive: a slot
+    that must append into a block whose refcount > 1 first copies it to a
+    private block, so the writer diverges while every other reader of the
+    shared block sees bit-identical KV.
+
+    `src`/`dst` are equal-length int vectors of block ids. Leaves without
+    a pool axis (bf16-cache scale stubs [L, 1, 1, KV, 1], lengths, block
+    tables, SSM state) pass through untouched. The cache argument is
+    donated — on device the copy happens in place in the pool."""
+    kv = cache["kv"]
+    nb = kv["k"].shape[1]
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    new_kv = {
+        name: (leaf.at[:, dst].set(leaf[:, src])
+               if leaf.ndim == 5 and leaf.shape[1] == nb else leaf)
+        for name, leaf in kv.items()
+    }
+    out = dict(cache)
+    out["kv"] = new_kv
+    return out
+
+
 def decode_step(cfg, params, cache, tokens_or_embeds,
                 policy: Optional[PrecisionPolicy] = None, shard=None,
                 n_valid=None, last_only: bool = False):
@@ -374,9 +403,13 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
     batch row continues from its own `cache["lengths"][b]`; `n_valid` [B]
     says how many of the S tokens are real per row (defaults to all S), so
     one call can mix rows that prefill a chunk, decode one token, or idle
-    (n_valid=0 rows leave their cache row bit-untouched). `last_only=True`
-    gathers each row's last *valid* position before the lm_head (serving:
-    avoids materialising [B,S,V])."""
+    (n_valid=0 rows leave their cache row bit-untouched). A row's length
+    need not start at 0: prefix-cached admission sets it to the matched
+    block boundary over a pre-populated block table, and the first
+    prefill chunk attends to the shared KV exactly as if this request had
+    written it (positions, masks, and scales are all driven by
+    `lengths`). `last_only=True` gathers each row's last *valid* position
+    before the lm_head (serving: avoids materialising [B,S,V])."""
     if cfg.input_mode == "tokens":
         x = params["embed"][tokens_or_embeds]
     else:
@@ -446,7 +479,8 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             gp = jax.tree.map(lambda a: a[li:li + per], params["blocks"])
             gst = jax.tree.map(lambda a: a[li:li + per], ssm_tree)
             (x, _), (st2, cv2) = _scan(body, (x, 0), (gp,) + gst)
-            outs_st.append(st2); outs_cv.append(cv2)
+            outs_st.append(st2)
+            outs_cv.append(cv2)
             sp = params["shared_attn"]
             xin = qmatmul(jnp.concatenate([x, x0], axis=-1), sp["in_proj"],
                           policy)
@@ -466,7 +500,8 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
             gp = jax.tree.map(lambda a: a[li:], params["blocks"])
             gst = jax.tree.map(lambda a: a[li:], ssm_tree)
             (x, _), (st2, cv2) = _scan(body, (x, 0), (gp,) + gst)
-            outs_st.append(st2); outs_cv.append(cv2)
+            outs_st.append(st2)
+            outs_cv.append(cv2)
         new_cache["ssm"] = (jnp.concatenate(outs_st),
                             jnp.concatenate(outs_cv))
         new_cache["kv"] = {

@@ -1,4 +1,7 @@
-"""Continuous-batching serving subsystem (slot pool + ragged KV cache)."""
-from .engine import (FinishedRequest, Request, SamplingParams, ServingEngine)
+"""Continuous-batching serving subsystem (slot pool + ragged KV cache,
+paged block pool with copy-on-write prefix sharing)."""
+from .engine import FinishedRequest, Request, SamplingParams, ServingEngine
+from .prefix_cache import PrefixCache
 
-__all__ = ["Request", "FinishedRequest", "SamplingParams", "ServingEngine"]
+__all__ = ["Request", "FinishedRequest", "SamplingParams", "ServingEngine",
+           "PrefixCache"]

@@ -18,7 +18,7 @@ One engine tick runs two kinds of jitted step, both jit-stable shapes:
 
 Admission happens between ticks: a finished slot (EOS or max tokens) is
 released immediately and the next pending request starts prefilling into
-it mid-flight, with its position counter reset to 0 — stale cache above a
+it mid-flight, with its position counter reset — stale cache above a
 row's length is masked per row, so slot reuse needs no cache zeroing.
 
 Paged KV mode (`kv_block_size`): instead of one contiguous max_len window
@@ -27,16 +27,38 @@ per slot, attention caches live in a global block pool
 tables, so cache HBM scales with tokens actually held, not
 slots x worst-case length. Admission reserves a request's worst-case
 block count (queueing FIFO when the pool can't cover it — never stalling
-an admitted request mid-flight); physical blocks are popped off a free
-list as the request's frontier crosses block boundaries and returned on
-release. Decode is bit-exact vs the contiguous layout: the gathered
-block view reconstructs the same masked cache every step. SSM state is a
-dense per-slot recurrent carry either way.
+an admitted request mid-flight); physical blocks are claimed as the
+request's frontier crosses block boundaries and released by refcount.
+Decode is bit-exact vs the contiguous layout: the gathered block view
+reconstructs the same masked cache every step. SSM state is a dense
+per-slot recurrent carry either way.
+
+Prefix caching (`prefix_cache=True`, paged attention families only):
+full blocks of prompt tokens are chain-hashed into a host-side
+`PrefixCache` as they prefill. A newly admitted request matches the
+longest cached block-aligned prefix of its prompt, points its block table
+at the shared physical blocks (per-block refcounts), and starts prefill
+at the matched boundary — the shared KV is neither recomputed nor
+re-stored. A full-prompt match recomputes only the final token, forking
+the block it appends into via copy-on-write (`model.copy_pool_blocks`),
+so writers diverge while readers keep bit-identical KV. Release only
+returns fully-unreferenced, uncached blocks to the free list; cached but
+unheld blocks are evicted LRU when allocation needs them. SSM/hybrid
+state is a recurrence with no block structure, so those families keep
+prefix caching off (decode is unchanged either way).
+
+Host-to-device control writes are coalesced per tick: admission, prefix
+matching, and block allocation all mutate host mirrors of `lengths` /
+`block_tables`, flushed as at most one device update each before the
+tick's jitted steps dispatch — never one dispatch per admitted slot or
+per allocated block.
 
 Sampling is per-request: greedy / temperature / top-k from
 `Request.sampling`, with a per-request RNG key (folded per emitted token),
 so a request's sampled tokens are independent of whatever happens to be
-co-scheduled with it.
+co-scheduled with it. Duplicate in-flight request ids are rejected at
+`submit` — two live requests with one id would share a fold_in RNG
+stream and interleave in `run()`'s sorted results.
 
 The jitted step functions come from `launch.steps.build_prefill_step(
 with_cache=True)` / `build_serve_step` — the same builders the dry-run and
@@ -48,6 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import deque
 from typing import Any, List, Optional
 
@@ -58,6 +81,7 @@ import numpy as np
 from ..launch import steps as S
 from ..launch.mesh import make_host_mesh
 from ..models import model as M
+from .prefix_cache import PrefixCache
 
 #: compiled (prefill, decode) step pairs shared across engine instances —
 #: keyed on everything that shapes the computation, so spinning up a new
@@ -124,6 +148,8 @@ class FinishedRequest:
     prompt_len: int
     admitted_tick: int
     finished_tick: int
+    prefix_hit_tokens: int = 0      # prompt tokens served from the cache
+    ttft_s: float = 0.0         # submit -> first sampled token (monotonic)
 
 
 class _Slot:
@@ -140,6 +166,10 @@ class _Slot:
         self.cache_len = 0                   # tokens written to the cache
         self.blocks_need = blocks_need       # worst-case paged reservation
         self.blocks: List[int] = []          # pool blocks held (paged mode)
+        self.prefix_hit = 0                  # prompt tokens matched cached
+        self.prefix_keys: List[str] = []     # chain keys of full blocks
+        self.registered = 0                  # prompt blocks offered to cache
+        self.first_token_time: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -164,7 +194,8 @@ class ServingEngine:
     def __init__(self, cfg, params, policy=None, max_slots: int = 4,
                  max_len: int = 256, prefill_chunk: int = 32, seed: int = 0,
                  mesh=None, kv_block_size: Optional[int] = None,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -176,6 +207,9 @@ class ServingEngine:
         if kv_blocks is not None and kv_block_size is None:
             raise ValueError("kv_blocks requires kv_block_size (a pool size "
                              "only makes sense for the paged layout)")
+        if prefix_cache and kv_block_size is None:
+            raise ValueError("prefix_cache requires kv_block_size (prefix "
+                             "sharing is a property of the paged layout)")
         self.kv_block_size = kv_block_size
 
         # over-allocate by one chunk: a ragged write window [len, len+chunk)
@@ -188,15 +222,39 @@ class ServingEngine:
         # paged mode: a request's KV lives in pool blocks its table points
         # at, not a private max_len window. Admission reserves its
         # worst-case block count (so an admitted request can always finish);
-        # physical blocks are popped off the free list on demand as its
-        # prefill/decode frontier crosses block boundaries.
+        # physical blocks are claimed off the free list on demand as its
+        # prefill/decode frontier crosses block boundaries, held by
+        # refcount (prefix sharing can put several slots on one block),
+        # and recycled only when fully unreferenced and uncached.
         self.paged = "block_tables" in self.cache
         self._committed = 0          # worst-case blocks promised to slots
         if self.paged:
             self.num_blocks = int(self.cache["kv"]["k"].shape[1])
             self._free: List[int] = list(range(self.num_blocks))
+            self._ref = np.zeros((self.num_blocks,), np.int32)  # slot holds
+            self._cached_unheld = 0      # cached blocks with zero slot refs
             self.peak_blocks_used = 0
             kv_blocks = self.num_blocks
+        # prefix caching shares KV across requests at block granularity;
+        # SSM/hybrid carry a recurrence that cannot be entered mid-stream,
+        # so for those families the flag degrades to a no-op
+        self._prefix = (PrefixCache(kv_block_size)
+                        if prefix_cache and self.paged
+                        and "ssm" not in self.cache else None)
+        self.cow_copies = 0
+
+        # host mirrors of the device-side control arrays: admission and
+        # block allocation write here, `_flush_host_updates` applies each
+        # tick's mutations as ONE device update per array (never one
+        # dispatch per slot or per block)
+        self._lengths_host = np.zeros((max_slots,), np.int32)
+        self._lengths_dirty = False
+        if self.paged:
+            mb = self.cache["block_tables"].shape[1]
+            self._tables_host = np.zeros((max_slots, mb), np.int32)
+            self._tables_dirty = False
+        self._ssm_reset_rows: List[int] = []
+        self.h2d_updates = 0         # control-array device writes (flushes)
 
         self._prefill, self._decode = _compiled_steps(
             cfg, policy, self.mesh, max_slots, alloc, prefill_chunk,
@@ -207,11 +265,15 @@ class ServingEngine:
         self.pending: deque = deque()
         self.tick = 0
         self._next_id = 0
+        self._active_ids: set = set()     # pending + in-flight request ids
+        self._submit_time: dict = {}
         # cumulative stats
         self.prompt_tokens = 0
         self.generated_tokens = 0
         self.busy_slot_ticks = 0
         self.total_slot_ticks = 0
+        self.prefill_tokens_computed = 0
+        self.prefix_tokens_reused = 0
 
     # -- request lifecycle --------------------------------------------------
 
@@ -237,7 +299,15 @@ class ServingEngine:
                 f"the pool only has {self.num_blocks}")
         if request.id is None:
             request.id = self._next_id
+        elif request.id in self._active_ids:
+            # two live requests with one id would share a fold_in RNG
+            # stream and interleave in run()'s sorted results
+            raise ValueError(
+                f"request id {request.id} is already pending or in flight; "
+                "ids must be unique among live requests")
         self._next_id = max(self._next_id, request.id) + 1
+        self._active_ids.add(request.id)
+        self._submit_time[request.id] = time.monotonic()
         self.pending.append(request)
         return request.id
 
@@ -248,6 +318,93 @@ class ServingEngine:
         if req.seed is not None:
             return jax.random.PRNGKey(req.seed)
         return jax.random.fold_in(jax.random.PRNGKey(self.seed), req.id)
+
+    # -- paged block allocator ---------------------------------------------
+
+    def _alloc_block(self) -> int:
+        """Claim an unreferenced physical block: pop the free list, or
+        evict the LRU cached-but-unheld prefix block. Unreachable under
+        reservation admission unless the pool is fully committed AND the
+        prefix cache holds nothing evictable — which reservation rules
+        out (an admitted request's worst case is always covered by free
+        plus evictable blocks)."""
+        if self._free:
+            blk = self._free.pop()
+        else:
+            blk = (self._prefix.evict_lru(lambda b: self._ref[b] == 0)
+                   if self._prefix is not None else None)
+            if blk is None:
+                raise RuntimeError("KV block pool exhausted mid-flight")
+            self._cached_unheld -= 1     # the evicted entry was unheld
+        # peak CONCURRENT demand (what to size kv_blocks from): blocks
+        # held by in-flight requests plus this one — cached-but-unheld
+        # residency is reclaimable and must not inflate the high-water
+        # mark, so it is subtracted back out. `_cached_unheld` is
+        # maintained incrementally (ref 0<->1 transitions, evictions):
+        # this hot path never scans the cache.
+        in_use = (self.num_blocks - len(self._free) - self._cached_unheld)
+        self.peak_blocks_used = max(self.peak_blocks_used, in_use)
+        return blk
+
+    def _unref(self, blk: int):
+        """Drop one slot's hold on `blk`; recycle it only when no slot
+        references it AND it doesn't back a prefix-cache entry (cached
+        blocks stay resident, evictable LRU when allocation needs them)."""
+        self._ref[blk] -= 1
+        if self._ref[blk] == 0:
+            if self._prefix is not None and self._prefix.holds(blk):
+                self._cached_unheld += 1     # stays resident, evictable
+            else:
+                self._free.append(blk)
+
+    def _match_prefix(self, b: int, slot: _Slot) -> int:
+        """Point slot b's table at the longest cached block-aligned prefix
+        of its prompt; returns the starting prefill position (0 = cold).
+        A full-prompt match still recomputes the final token (sampling
+        needs its logits), which appends into the last matched block —
+        that block is forked copy-on-write so the cached KV and any other
+        holder stay bit-identical."""
+        slot.prefix_keys = self._prefix.block_keys(slot.request.prompt)
+        blocks = self._prefix.match(slot.prefix_keys)
+        if not blocks:
+            return 0
+        bs = self.kv_block_size
+        matched = len(blocks) * bs
+        start = min(matched, slot.prompt_len - 1)
+        for i, blk in enumerate(blocks):
+            if self._ref[blk] == 0:
+                self._cached_unheld -= 1     # cached block gains a holder
+            self._ref[blk] += 1
+            self._tables_host[b, i] = blk
+            slot.blocks.append(blk)
+        self._tables_dirty = True
+        if start < matched:
+            # copy-on-write fork: our ref on src keeps it un-evictable
+            # while the replacement block is claimed
+            src = blocks[-1]
+            dst = self._alloc_block()
+            self.cache = M.copy_pool_blocks(
+                self.cache, np.asarray([src], np.int32),
+                np.asarray([dst], np.int32))
+            self.cow_copies += 1
+            self._ref[dst] += 1
+            self._unref(src)
+            slot.blocks[-1] = dst
+            self._tables_host[b, len(blocks) - 1] = dst
+        slot.prefix_hit = start
+        slot.registered = len(blocks)     # shared blocks are already cached
+        self.prefix_tokens_reused += start
+        return start
+
+    def _register_prefix_blocks(self, b: int, slot: _Slot):
+        """Offer slot b's newly completed full prompt blocks to the cache
+        (first writer wins; losers keep their private copy)."""
+        if self._prefix is None:
+            return
+        full = min(slot.cache_len, slot.prompt_len) // self.kv_block_size
+        for i in range(slot.registered, full):
+            self._prefix.insert(slot.prefix_keys[i], slot.blocks[i])
+        slot.registered = max(slot.registered, full)
 
     def _admit(self):
         for b in range(self.max_slots):
@@ -262,39 +419,63 @@ class ServingEngine:
                     # mid-flight waiting for a block
                     break
                 self.pending.popleft()
-                self.slots[b] = _Slot(req, self._request_key(req), self.tick,
-                                      blocks_need=need)
+                slot = _Slot(req, self._request_key(req), self.tick,
+                             blocks_need=need)
+                self.slots[b] = slot
                 self._committed += need
-                # reset this row's position counter; stale KV above a row's
-                # length is masked per row, so the KV cache needs no zeroing
-                self.cache["lengths"] = self.cache["lengths"].at[b].set(0)
+                start = 0
                 if self.paged:
                     # hygiene: a fresh table row points at block 0 until
-                    # blocks are allocated (reads above the row's length
+                    # blocks are claimed (reads above the row's length
                     # are masked either way)
-                    self.cache["block_tables"] = \
-                        self.cache["block_tables"].at[b].set(0)
+                    self._tables_host[b, :] = 0
+                    self._tables_dirty = True
+                    if self._prefix is not None:
+                        start = self._match_prefix(b, slot)
+                # the row's position counter starts at the matched prefix
+                # boundary (0 when cold); stale KV above a row's length is
+                # masked per row, so the KV cache needs no zeroing
+                slot.prefill_pos = start
+                slot.cache_len = start
+                self._lengths_host[b] = start
+                self._lengths_dirty = True
                 if "ssm" in self.cache:
                     # SSM state is a recurrent carry, not a masked window —
                     # a reused slot must start from the zero state
-                    self.cache["ssm"] = tuple(
-                        a.at[:, b].set(jnp.zeros((), a.dtype))
-                        for a in self.cache["ssm"])
+                    self._ssm_reset_rows.append(b)
 
     def _ensure_blocks(self, b: int, upto: int):
         """Grow slot b's block table to cover logical positions [0, upto):
-        pop blocks off the free list and write them into the table row."""
+        claim blocks and write them into the host table mirror (flushed
+        once per tick)."""
         slot = self.slots[b]
         need = -(-upto // self.kv_block_size)
         while len(slot.blocks) < need:
-            if not self._free:      # unreachable under reservation admission
-                raise RuntimeError("KV block pool exhausted mid-flight")
-            blk = self._free.pop()
-            self.cache["block_tables"] = self.cache["block_tables"].at[
-                b, len(slot.blocks)].set(blk)
+            blk = self._alloc_block()
+            self._ref[blk] += 1
+            self._tables_host[b, len(slot.blocks)] = blk
+            self._tables_dirty = True
             slot.blocks.append(blk)
-        self.peak_blocks_used = max(self.peak_blocks_used,
-                                    self.num_blocks - len(self._free))
+
+    def _flush_host_updates(self):
+        """Apply this tick's admission / allocation mutations to the device
+        control arrays — at most one update per array per tick, however
+        many slots were admitted or blocks claimed."""
+        if self._ssm_reset_rows:
+            rows = np.asarray(sorted(set(self._ssm_reset_rows)), np.int32)
+            self.cache["ssm"] = tuple(
+                a.at[:, rows].set(jnp.zeros((), a.dtype))
+                for a in self.cache["ssm"])
+            self._ssm_reset_rows.clear()
+            self.h2d_updates += 1
+        if self._lengths_dirty:
+            self.cache["lengths"] = jnp.asarray(self._lengths_host)
+            self._lengths_dirty = False
+            self.h2d_updates += 1
+        if self.paged and self._tables_dirty:
+            self.cache["block_tables"] = jnp.asarray(self._tables_host)
+            self._tables_dirty = False
+            self.h2d_updates += 1
 
     # -- one engine tick ----------------------------------------------------
 
@@ -336,38 +517,51 @@ class ServingEngine:
         if not any(s is not None for s in self.slots):
             return []
 
-        sample_logits = {}                       # row -> logits [V*]
-        # 1) chunked prefill, one chunk per prefilling slot (B=1 calls);
-        #    the final chunk's last-valid logits seed the first sample
+        # plan the whole tick first — prefill chunks and decode rows are
+        # known before any dispatch, so block allocation and control-array
+        # updates coalesce into one flush
+        prefill_plan = []                        # (row, tokens, take)
         for b, slot in enumerate(self.slots):
             if slot is not None and slot.prefilling:
                 tokens, take = self._prefill_block(slot)
                 if self.paged:
                     self._ensure_blocks(b, slot.cache_len + take)
-                lg, self.cache = self._prefill(
-                    self.params, self.cache, tokens,
-                    jnp.asarray([take], jnp.int32), jnp.int32(b))
-                slot.prefill_pos += take
-                slot.cache_len += take
-                if not slot.prefilling:
-                    sample_logits[b] = lg[0]
-
-        # 2) pool decode for rows already holding a sampled token
+                prefill_plan.append((b, tokens, take))
         dec_rows = [b for b, s in enumerate(self.slots)
                     if s is not None and not s.prefilling
-                    and s.next_input is not None and b not in sample_logits]
+                    and s.next_input is not None]
+        if self.paged:
+            for b in dec_rows:
+                self._ensure_blocks(b, self.slots[b].cache_len + 1)
+        self._flush_host_updates()
+
+        sample_logits = {}                       # row -> logits [V*]
+        # 1) chunked prefill, one chunk per prefilling slot (B=1 calls);
+        #    the final chunk's last-valid logits seed the first sample
+        for b, tokens, take in prefill_plan:
+            slot = self.slots[b]
+            lg, self.cache = self._prefill(
+                self.params, self.cache, tokens,
+                jnp.asarray([take], jnp.int32), jnp.int32(b))
+            slot.prefill_pos += take
+            slot.cache_len += take
+            self._lengths_host[b] += take        # mirror the step's +take
+            self.prefill_tokens_computed += take
+            if not slot.prefilling:
+                sample_logits[b] = lg[0]
+            self._register_prefix_blocks(b, slot)
+
+        # 2) pool decode for rows already holding a sampled token
         if dec_rows:
             n_valid = np.zeros((self.max_slots,), np.int32)
             n_valid[dec_rows] = 1
-            if self.paged:
-                for b in dec_rows:
-                    self._ensure_blocks(b, self.slots[b].cache_len + 1)
             lg, self.cache = self._decode(
                 self.params, self.cache, self._decode_block(dec_rows),
                 jnp.asarray(n_valid))
             for b in dec_rows:
                 sample_logits[b] = lg[b]
                 self.slots[b].cache_len += 1
+                self._lengths_host[b] += 1       # mirror the step's +1
 
         # 3) per-request sampling over every row that produced logits
         rows = sorted(sample_logits)
@@ -384,11 +578,14 @@ class ServingEngine:
                 jnp.stack([sample_logits[b] for b in rows]),
                 jnp.stack(keys), jnp.asarray(np.asarray(temps, np.float32)),
                 jnp.asarray(np.asarray(topks, np.int32))))
+            now = time.monotonic()
             for i, b in enumerate(rows):
                 slot = self.slots[b]
                 t = int(toks[i])
                 slot.generated.append(t)
                 slot.next_input = t
+                if slot.first_token_time is None:
+                    slot.first_token_time = now
                 req = slot.request
                 hit_eos = req.eos_id is not None and t == req.eos_id
                 if hit_eos or len(slot.generated) >= req.max_new_tokens:
@@ -398,19 +595,27 @@ class ServingEngine:
                         finish_reason="eos" if hit_eos else "length",
                         prompt_len=slot.prompt_len,
                         admitted_tick=slot.admitted_tick,
-                        finished_tick=self.tick))
+                        finished_tick=self.tick,
+                        prefix_hit_tokens=slot.prefix_hit,
+                        ttft_s=slot.first_token_time
+                        - self._submit_time.pop(req.id,
+                                                slot.first_token_time)))
                     self.prompt_tokens += slot.prompt_len
                     self.generated_tokens += len(slot.generated)
                     if self.paged:
-                        # blocks go straight back to the free list; the
-                        # next occupant's masked view makes stale KV in
-                        # recycled blocks unreachable
-                        self._free.extend(slot.blocks)
+                        # refcounted release: a block returns to the free
+                        # list only when no slot holds it and it backs no
+                        # prefix-cache entry; the next occupant's masked
+                        # view makes stale KV in recycled blocks
+                        # unreachable
+                        for blk in slot.blocks:
+                            self._unref(blk)
                         self._committed -= slot.blocks_need
+                    self._active_ids.discard(req.id)
                     self.slots[b] = None        # release: admit next tick
 
-        self.busy_slot_ticks += sum(s is not None for s in self.slots) \
-            + len(finished)
+        self.busy_slot_ticks += (sum(s is not None for s in self.slots)
+                                 + len(finished))
         self.total_slot_ticks += self.max_slots
         self.tick += 1
         return finished
@@ -430,15 +635,60 @@ class ServingEngine:
         done = list(self.events())
         return sorted(done, key=lambda f: f.id)
 
+    def check_invariants(self):
+        """Allocator/accounting consistency — every physical block is in
+        exactly one of: free list, held by >=1 slot, cached-but-unheld.
+        Raises AssertionError on drift (tests call this after every
+        tick)."""
+        assert self._committed == sum(
+            s.blocks_need for s in self.slots if s is not None), (
+            "committed_blocks drifted from in-flight reservations: "
+            f"{self._committed} vs slot sum")
+        if not self.paged:
+            return
+        held = int(np.sum(self._ref > 0))
+        scanned = (sum(1 for blk in self._prefix.blocks()
+                       if self._ref[blk] == 0)
+                   if self._prefix is not None else 0)
+        assert scanned == self._cached_unheld, (
+            f"cached-unheld counter drift: counter={self._cached_unheld} "
+            f"vs scan={scanned}")
+        free = len(self._free)
+        assert free + held + self._cached_unheld == self.num_blocks, (
+            f"block ledger drift: free={free} held={held} "
+            f"cached={self._cached_unheld} != pool {self.num_blocks}")
+        # cross-checks: refcounts match slot holdings; free blocks are
+        # unreferenced and uncached
+        holds = np.zeros((self.num_blocks,), np.int32)
+        for s in self.slots:
+            if s is not None:
+                for blk in s.blocks:
+                    holds[blk] += 1
+        assert np.array_equal(holds, self._ref), "refcount drift"
+        for blk in self._free:
+            assert self._ref[blk] == 0, f"free block {blk} still referenced"
+            assert self._prefix is None or not self._prefix.holds(blk), (
+                f"free block {blk} still backs a prefix-cache entry")
+
     def stats(self) -> dict:
         util = self.busy_slot_ticks / max(self.total_slot_ticks, 1)
         st = {"ticks": self.tick,
               "prompt_tokens": self.prompt_tokens,
               "generated_tokens": self.generated_tokens,
-              "slot_utilization": util}
+              "prefill_tokens_computed": self.prefill_tokens_computed,
+              "prefix_tokens_reused": self.prefix_tokens_reused,
+              "slot_utilization": util,
+              "committed_blocks": self._committed,
+              "h2d_updates": self.h2d_updates}
         if self.paged:
+            held = int(np.sum(self._ref > 0))
             st["kv_blocks"] = self.num_blocks
             st["kv_block_size"] = self.kv_block_size
             st["peak_blocks_used"] = self.peak_blocks_used
             st["free_blocks"] = len(self._free)
+            st["held_blocks"] = held
+            st["cached_blocks"] = self._cached_unheld
+            st["cow_copies"] = self.cow_copies
+        if self._prefix is not None:
+            st["prefix_cache"] = self._prefix.stats()
         return st

@@ -1,0 +1,309 @@
+"""Cross-request prefix caching over the paged KV pool: bit-exactness of
+shared-prefix decode vs cold decode for every cache family, copy-on-write
+fork correctness, refcounted release/LRU eviction leaving no reachable
+stale KV, the allocator ledger invariant after every tick, and the
+coalesced (per-tick, not per-slot/per-block) control-array updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PrecisionPolicy
+from repro.models import model as M
+from repro.serving import PrefixCache, Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(cfg):
+    return M.init_params(cfg, KEY, dtype=jnp.float32)
+
+
+def _prompt(i, plen, cfg, shared=0):
+    """Deterministic prompt: `shared` leading tokens common to every i."""
+    if cfg.input_mode == "tokens":
+        sys_p = jax.random.randint(jax.random.PRNGKey(2), (shared,), 0,
+                                   cfg.vocab)
+        tail = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(1),
+                                                     i), (plen,), 0,
+                                  cfg.vocab)
+    else:
+        sys_p = jax.random.normal(jax.random.PRNGKey(2),
+                                  (shared, cfg.d_model), jnp.bfloat16)
+        tail = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(1),
+                                                    i),
+                                 (plen, cfg.d_model), jnp.bfloat16)
+    return jnp.concatenate([sys_p, tail]) if shared else tail
+
+
+def _req(i, plen, cfg, gen=4, shared=0, **kw):
+    return Request(prompt=_prompt(i, plen, cfg, shared=shared),
+                   max_new_tokens=gen, id=i, **kw)
+
+
+def _drain_checked(eng, reqs):
+    """Drive to completion, validating the allocator ledger after every
+    tick (free + held + cached-but-unheld == pool; refcounts == slot
+    holdings; committed == sum of reservations)."""
+    for r in reqs:
+        eng.submit(r)
+    done = []
+    while eng.has_work():
+        done.extend(eng.step())
+        eng.check_invariants()
+    return {f.id: f.tokens for f in done}
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache unit behaviour (no engine)
+# ---------------------------------------------------------------------------
+
+def test_chain_keys_are_prefix_sensitive():
+    """Block i's key covers every token before it: identical block contents
+    after different prefixes must NOT collide (causal KV differs)."""
+    pc = PrefixCache(4)
+    a = pc.block_keys([1, 2, 3, 4, 9, 9, 9, 9])
+    b = pc.block_keys([5, 6, 7, 8, 9, 9, 9, 9])
+    assert len(a) == len(b) == 2
+    assert a[0] != b[0]
+    assert a[1] != b[1]          # same tokens, different prefix
+    assert pc.block_keys([1, 2, 3, 4])[0] == a[0]
+    assert pc.block_keys([1, 2, 3]) == []     # partial blocks never hashed
+
+
+def test_match_insert_evict_roundtrip():
+    pc = PrefixCache(2)
+    keys = pc.block_keys([1, 2, 3, 4, 5, 6])
+    assert pc.match(keys) == []
+    assert pc.insert(keys[0], 10) and pc.insert(keys[1], 11)
+    assert not pc.insert(keys[0], 12)          # first writer wins
+    assert pc.match(keys) == [10, 11]          # longest prefix, in order
+    assert pc.holds(10) and not pc.holds(12)
+    # LRU eviction skips blocks the engine still holds
+    held = {11}
+    assert pc.evict_lru(lambda b: b not in held) == 10
+    assert pc.match(keys) == []                # parent gone -> no match
+    assert pc.evict_lru(lambda b: b not in held) is None
+    assert pc.holds(11)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness per cache family (the headline invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2_5_14b", "mamba2_370m",
+                                  "zamba2_1p2b", "deepseek_moe_16b"])
+def test_shared_prefix_decode_matches_cold(arch):
+    """Greedy decode with prefix caching on a shared-system-prompt workload
+    is bit-identical to the cold paged engine AND the contiguous engine
+    for every cache family (SSM/hybrid carry a recurrence, so the flag
+    degrades to a no-op there — decode must still be unperturbed)."""
+    cfg = get_config(arch).reduced()
+    p = _params(cfg)
+    lens = [(0, 3), (1, 7), (2, 5), (3, 2)]
+    reqs = lambda: [_req(i, pl, cfg, shared=8) for i, pl in lens]  # noqa: E731
+
+    def run(**kw):
+        eng = ServingEngine(cfg, p, max_slots=2, max_len=24,
+                            prefill_chunk=4, **kw)
+        return _drain_checked(eng, reqs()), eng
+
+    cont, _ = run()
+    cold, _ = run(kv_block_size=4)
+    warm, eng = run(kv_block_size=4, prefix_cache=True)
+    assert cont == cold == warm
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        assert eng.stats()["prefix_tokens_reused"] > 0
+        assert (eng.stats()["prefill_tokens_computed"]
+                < eng.stats()["prompt_tokens"])
+    else:
+        assert "prefix_cache" not in eng.stats()    # recurrent: no-op
+
+
+def test_shared_prefix_quantized_kv_bit_exact():
+    """The int8-codes + per-position-scales cache family stays bit-exact
+    when matched blocks (codes AND scales) are shared across requests."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    pol = PrecisionPolicy.flexpe(8)
+    p = _params(cfg)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, p, policy=pol, max_slots=2, max_len=24,
+                            prefill_chunk=4, **kw)
+        return _drain_checked(eng, [_req(i, pl, cfg, shared=8)
+                                    for i, pl in [(0, 3), (1, 6), (2, 4)]])
+
+    cold = run(kv_block_size=4)
+    warm = run(kv_block_size=4, prefix_cache=True)
+    assert cold == warm
+
+
+def test_prefill_skips_matched_blocks():
+    """Serial identical-prefix requests through one slot: followers start
+    prefill at the matched block boundary, so the engine computes far
+    fewer prompt tokens than it admits."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, prefix_cache=True)
+    done = _drain_checked(eng, [_req(i, 3, cfg, shared=8) for i in range(4)])
+    assert len(done) == 4
+    st = eng.stats()
+    # 4 requests x 11 prompt tokens admitted; followers each matched the
+    # 8-token (2-block) shared prefix
+    assert st["prompt_tokens"] == 44
+    assert st["prefix_tokens_reused"] == 3 * 8
+    assert st["prefill_tokens_computed"] == 44 - 3 * 8
+    assert st["prefix_cache"]["hits"] >= 6
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write fork
+# ---------------------------------------------------------------------------
+
+def test_cow_fork_writer_diverges_reader_unchanged():
+    """A full-prompt match recomputes only the final token, appending into
+    a CoW fork of the last shared block: the writer's decode diverges
+    freely while later readers of the cached blocks (and the cached KV
+    itself) stay bit-identical to the cold run."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    # 8-token prompt == 2 full blocks -> followers match the whole prompt
+    reqs = lambda: [_req(i, 0, cfg, shared=8) for i in range(3)]  # noqa: E731
+    ref = ServingEngine(cfg, p, max_slots=1, max_len=24,
+                        prefill_chunk=4).run([_req(0, 0, cfg, shared=8)])
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, prefix_cache=True)
+    done = _drain_checked(eng, reqs())
+    assert all(done[i] == ref[0].tokens for i in range(3))
+    st = eng.stats()
+    assert st["cow_copies"] == 2          # both followers forked the tail
+    assert st["prefix_tokens_reused"] == 2 * 7   # full match caps at P-1
+
+
+def test_cow_pool_copy_preserves_source_block():
+    """model.copy_pool_blocks forks dst <- src across codes and paged
+    scales without touching src or any other block."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    cache = M.init_cache(cfg, 2, 16, PrecisionPolicy.flexpe(8),
+                         kv_block_size=4)
+    k = jax.random.normal(KEY, cache["kv"]["k"].shape)
+    cache["kv"]["k"] = (k * 100).astype(cache["kv"]["k"].dtype)
+    before = np.asarray(cache["kv"]["k"])
+    out = M.copy_pool_blocks(cache, np.asarray([1], np.int32),
+                             np.asarray([3], np.int32))
+    after = np.asarray(out["kv"]["k"])
+    np.testing.assert_array_equal(after[:, 3], before[:, 1])
+    keep = [b for b in range(before.shape[1]) if b != 3]
+    np.testing.assert_array_equal(after[:, keep], before[:, keep])
+
+
+# ---------------------------------------------------------------------------
+# refcounted release + LRU eviction
+# ---------------------------------------------------------------------------
+
+def test_release_keeps_cached_blocks_out_of_free_list():
+    """After a request finishes, its full prompt blocks stay resident as
+    cached-but-unheld entries (not freed), and the ledger still balances."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, prefix_cache=True)
+    _drain_checked(eng, [_req(0, 3, cfg, shared=8)])
+    st = eng.stats()
+    assert st["cached_blocks"] == 2               # the two full blocks
+    assert st["held_blocks"] == 0
+    assert st["free_blocks"] == st["kv_blocks"] - 2
+    assert st["committed_blocks"] == 0
+
+
+def test_eviction_under_pressure_leaves_no_stale_kv():
+    """A pool too small to keep old prefixes cached must evict LRU entries
+    to admit new requests; evicted-then-recomputed prefixes and recycled
+    blocks decode exactly like solo runs (no reachable stale KV)."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    sys_a = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, cfg.vocab)
+    sys_b = jax.random.randint(jax.random.PRNGKey(3), (8,), 0, cfg.vocab)
+
+    def req(i, system):
+        tail = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(1),
+                                                     i), (3,), 0, cfg.vocab)
+        return Request(prompt=jnp.concatenate([system, tail]),
+                       max_new_tokens=4, id=i)
+
+    def solo(i, system):
+        eng = ServingEngine(cfg, p, max_slots=1, max_len=24,
+                            prefill_chunk=4)
+        return eng.run([req(i, system)])[0].tokens
+
+    # each request needs ceil((8+3+4)/4) = 4 blocks; a 5-block pool can't
+    # keep both prefixes' cached blocks resident, so alternating prefixes
+    # forces LRU eviction on every admission after the first
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, kv_blocks=5, prefix_cache=True)
+    for i, system in enumerate((sys_a, sys_b, sys_a)):
+        done = _drain_checked(eng, [req(i, system)])
+        assert done[i] == solo(i, system), i
+    assert eng.stats()["prefix_cache"]["evictions"] > 0
+
+
+def test_reservation_still_queues_with_cache_resident():
+    """Worst-case reservation admission composes with cached residency:
+    requests queue FIFO when commitments would exceed the pool, evictable
+    cached blocks are reclaimed on demand, and nothing stalls."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, kv_blocks=6, prefix_cache=True)
+    # each needs ceil((8+1+4)/4) = 4 blocks -> pool fits one at a time
+    done = _drain_checked(eng, [_req(i, 1, cfg, shared=8) for i in range(3)])
+    assert len(done) == 3
+    solo = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    for i in range(3):
+        assert done[i] == solo.run([_req(i, 1, cfg, shared=8)])[0].tokens, i
+
+
+# ---------------------------------------------------------------------------
+# coalesced control-array updates + ledger stats
+# ---------------------------------------------------------------------------
+
+def test_control_updates_coalesce_per_tick():
+    """One tick admitting several slots, each claiming several blocks, must
+    issue at most one device update for lengths and one for block tables
+    — never one dispatch per slot or per block."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=4, max_len=24, prefill_chunk=8,
+                        kv_block_size=4)
+    for i in range(4):
+        eng.submit(_req(i, 8, cfg))
+    before = eng.stats()["h2d_updates"]
+    eng.step()          # 4 admissions, 2 blocks each = 8 block claims
+    assert eng.stats()["h2d_updates"] - before <= 2
+    # steady-state decode ticks cross block boundaries without any
+    # admissions: still at most one table flush (lengths advance on
+    # device inside the jitted step, no host write needed)
+    before = eng.stats()["h2d_updates"]
+    eng.step()
+    assert eng.stats()["h2d_updates"] - before <= 1
+    while eng.has_work():
+        eng.step()
+        eng.check_invariants()
+
+
+def test_stats_ledger_fields_balance():
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=2, max_len=24, prefill_chunk=4,
+                        kv_block_size=4, prefix_cache=True)
+    for r in [_req(i, 3 + i, cfg, shared=4) for i in range(4)]:
+        eng.submit(r)
+    while eng.has_work():
+        eng.step()
+        st = eng.stats()
+        assert (st["free_blocks"] + st["held_blocks"]
+                + st["cached_blocks"] == st["kv_blocks"])
+        assert st["committed_blocks"] >= 0
+        eng.check_invariants()

@@ -116,7 +116,8 @@ def test_data_pipeline_deterministic_and_partitioned():
                               np.asarray(b3["tokens"]))
     # host shards tile the global batch
     parts = [host_batch(cfg, 7, i, 4)["tokens"] for i in range(4)]
-    np.testing.assert_array_equal(np.concatenate([np.asarray(p) for p in parts]),
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p) for p in parts]),
                                   np.asarray(b1["tokens"]))
     # labels are next-token shifted
     np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),

@@ -8,8 +8,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serving import FinishedRequest, Request, SamplingParams, \
-    ServingEngine
+from repro.serving import (FinishedRequest, Request, SamplingParams,
+                           ServingEngine)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -49,8 +49,8 @@ def test_chunked_prefill_matches_token_by_token(arch):
         lg_b, cache_b = M.decode_step(cfg, p, cache_b, seq[:, t:t + 1])
     np.testing.assert_allclose(np.asarray(lg_a[:, -1]), np.asarray(lg_b[:, 0]),
                                atol=2e-5)
-    assert cache_a["lengths"].tolist() == cache_b["lengths"].tolist() == \
-        [10, 10]
+    assert (cache_a["lengths"].tolist() == cache_b["lengths"].tolist()
+            == [10, 10])
 
 
 def test_ragged_rows_advance_independently():
@@ -223,6 +223,28 @@ def test_submit_rejects_invalid_requests():
     assert not eng.has_work()
 
 
+def test_submit_rejects_duplicate_live_ids():
+    """Two live requests with one explicit id would share a fold_in RNG
+    stream and interleave in run()'s sorted results: the second submit
+    must raise while the first is pending or in flight. Once the first
+    finishes, its id becomes reusable."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    eng = ServingEngine(cfg, p, max_slots=1, max_len=24, prefill_chunk=4)
+    eng.submit(_req(5, 4, cfg))
+    with pytest.raises(ValueError):               # still pending
+        eng.submit(_req(5, 4, cfg))
+    eng.step()                                    # admitted, in flight
+    with pytest.raises(ValueError):
+        eng.submit(_req(5, 4, cfg))
+    # auto-assigned ids keep clear of the explicit one
+    auto = eng.submit(Request(prompt=_prompt(1, 4, cfg), max_new_tokens=2))
+    assert auto != 5
+    list(eng.events())
+    assert eng.submit(_req(5, 4, cfg)) == 5       # finished: reusable
+    list(eng.events())
+
+
 def test_stats_and_finished_metadata():
     cfg = get_config("qwen2_5_14b").reduced()
     p = _params(cfg)
@@ -232,5 +254,7 @@ def test_stats_and_finished_metadata():
     st = eng.stats()
     assert st["prompt_tokens"] == 15
     assert st["generated_tokens"] == 8
+    assert st["prefill_tokens_computed"] == 15    # no prefix cache: all cold
     assert 0.0 < st["slot_utilization"] <= 1.0
+    assert all(f.ttft_s >= 0.0 for f in done)
     assert not eng.has_work()
