@@ -12,14 +12,23 @@ slots per contiguous slot at byte parity) and
 `prefix_prefill_reduction` (cold / prefix-cached prefill tokens on the
 shared-system-prompt workload) — the latter two are scheduling
 invariants, fully deterministic. A gated metric more than `tolerance`
-below its baseline fails the job. Absolute tok/s is printed for
-trend-watching and gated only under --gate-absolute (off in CI:
-hosted-runner wall clock is not a stable reference).
+below its baseline fails the job. `sample_syncs_per_token` is gated
+ABSOLUTELY (must stay < 1): the overlap-dispatch loop's whole point is
+that a sampled token's device→host sync must not gate the next
+dispatch, and that property is a counter, not wall clock. Absolute
+tok/s is printed for trend-watching and gated only under
+--gate-absolute (off in CI: hosted-runner wall clock is not a stable
+reference).
 
 After an intentional perf change, refresh the baseline with
     PYTHONPATH=src python benchmarks/bench_serving.py \
         --json benchmarks/baselines/serving.json
-and commit it alongside the change.
+and commit it alongside the change. For the wall-clock-derived ratios
+(`speedup_vs_static`, `paged_speedup_vs_static`) prefer committing a
+value somewhat BELOW a fast dev machine's measurement: the gate only
+fires on drops below the floor, so a conservative baseline keeps the
+check meaningful without flaking slower hosted runners (PR 5 measured
+1.58/1.96 locally and committed 1.45/1.6).
 """
 from __future__ import annotations
 
@@ -29,8 +38,10 @@ import sys
 
 GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio",
          "prefix_prefill_reduction")
+# metric -> exclusive ceiling, independent of the baseline file
+ABSOLUTE_CEILINGS = {"sample_syncs_per_token": 1.0}
 INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
-                 "prefix_ttft_ratio")
+                 "prefix_ttft_ratio", "overlap_speedup_vs_sync")
 
 
 def main(argv=None) -> int:
@@ -66,6 +77,17 @@ def main(argv=None) -> int:
             failures.append(
                 f"{key}: {cur[key]:.3f} < floor {floor:.3f} "
                 f"(baseline {base[key]:.3f} - {args.tolerance:.0%})")
+    for key, ceiling in ABSOLUTE_CEILINGS.items():
+        if key not in cur:
+            failures.append(f"{key}: missing from current metrics")
+            continue
+        status = "OK " if cur[key] < ceiling else "FAIL"
+        print(f"  [{status}] {key}: {cur[key]:.3f} "
+              f"(absolute ceiling {ceiling:.3f}, exclusive)")
+        if cur[key] >= ceiling:
+            failures.append(f"{key}: {cur[key]:.3f} >= ceiling "
+                            f"{ceiling:.3f} — the overlapped loop is "
+                            "blocking on sample syncs again")
     for key in INFORMATIONAL:
         if not args.gate_absolute and key in cur:
             ref = f" (baseline {base[key]:.1f})" if key in base else ""

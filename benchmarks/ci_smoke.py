@@ -5,13 +5,14 @@ smoke step (previously two hand-rolled `repro.launch.serve` invocations).
     PYTHONPATH=src python benchmarks/ci_smoke.py --backend pallas-interpret
 
 Each run drives the continuous-batching engine over the same mixed-length
-workload with a shared system prompt, three ways: contiguous per-slot
-cache, paged block-pool cache (`--kv-block-size`), and paged with
-cross-request prefix caching (`--prefix-cache`, copy-on-write block
-sharing). It fails if any pair of runs disagrees on greedy tokens — the
-paged layout AND prefix sharing must be bit-exact, not just plausible.
-Backend choice scales the workload down for the slower interpreted Pallas
-kernels.
+workload with a shared system prompt, four ways: contiguous per-slot
+cache under the overlap-dispatch loop, the SAME contiguous workload under
+the sync loop (`--no-overlap` — the overlapped loop must be bit-exact
+against it, not just plausible), paged block-pool cache
+(`--kv-block-size`), and paged with cross-request prefix caching
+(`--prefix-cache`, copy-on-write block sharing). It fails if any pair of
+runs disagrees on greedy tokens. Backend choice scales the workload down
+for the slower interpreted Pallas kernels.
 """
 from __future__ import annotations
 
@@ -42,12 +43,15 @@ def main(argv=None) -> int:
     base = ["--arch", args.arch, "--reduced", "--requests", str(n),
             "--slots", str(slots), "--prompt-len", str(plen), "--mixed",
             "--gen", str(gen), "--prefill-chunk", str(chunk),
-            "--shared-prefix", str(shared),
+            "--shared-prefix", str(shared), "--overlap",
             "--policy", "flexpe-fxp8", "--backend", args.backend]
     paged_args = base + ["--kv-block-size", str(args.kv_block_size)]
 
-    print(f"== contiguous KV ({args.backend}) ==")
+    print(f"== contiguous KV, overlap loop ({args.backend}) ==")
     contiguous = serve.main(base)
+    print(f"== contiguous KV, sync loop ({args.backend}) ==")
+    sync = serve.main([a for a in base if a != "--overlap"]
+                      + ["--no-overlap"])
     print(f"== paged KV, block size {args.kv_block_size} "
           f"({args.backend}) ==")
     paged = serve.main(paged_args)
@@ -55,6 +59,7 @@ def main(argv=None) -> int:
     cached = serve.main(paged_args + ["--prefix-cache"])
 
     runs = {"contiguous": {f.id: f.tokens for f in contiguous},
+            "sync": {f.id: f.tokens for f in sync},
             "paged": {f.id: f.tokens for f in paged},
             "prefix-cache": {f.id: f.tokens for f in cached}}
     ok = True
@@ -64,8 +69,8 @@ def main(argv=None) -> int:
         if toks != runs["contiguous"]:
             bad = [i for i in runs["contiguous"]
                    if runs["contiguous"][i] != toks.get(i)]
-            print(f"FAIL: {name} decode diverged from contiguous for "
-                  f"request(s) {bad}", file=sys.stderr)
+            print(f"FAIL: {name} decode diverged from contiguous/overlap "
+                  f"for request(s) {bad}", file=sys.stderr)
             ok = False
     if not ok:
         return 1
@@ -79,8 +84,8 @@ def main(argv=None) -> int:
               "shared-prefix workload", file=sys.stderr)
         return 1
     print(f"smoke OK: {len(runs['contiguous'])} requests, prefix-cache == "
-          f"paged == contiguous bit-exact, {reused} prompt tokens served "
-          f"from the prefix cache ({args.backend})")
+          f"paged == sync == overlap bit-exact, {reused} prompt tokens "
+          f"served from the prefix cache ({args.backend})")
     return 0
 
 

@@ -1,11 +1,12 @@
-"""Continuous-batching serving example: submit requests with different
-prompt lengths and sampling params to the engine, stream completions as
-slots free up (Flex-PE FxP8 policy: quantized matmuls, CORDIC attention
-softmax, FxP8-quantized KV cache).
+"""Streaming serving example: submit requests with different prompt
+lengths and sampling params, stream per-token `RequestOutput` deltas as
+they decode under the overlap-dispatch loop, and follow one request with
+`engine.stream()` (Flex-PE FxP8 policy: quantized matmuls, CORDIC
+attention softmax, FxP8-quantized KV cache).
 
     PYTHONPATH=src python examples/serve_lm.py
     PYTHONPATH=src python examples/serve_lm.py --arch mamba2_370m --gen 32
-    PYTHONPATH=src python examples/serve_lm.py --backend pallas
+    PYTHONPATH=src python examples/serve_lm.py --backend pallas --no-overlap
 """
 import argparse
 
@@ -23,6 +24,8 @@ def main():
     ap.add_argument("--arch", default="qwen2_5_14b")
     ap.add_argument("--gen", type=int, default=12)
     ap.add_argument("--backend", default="reference")
+    ap.add_argument("--overlap", default=True,
+                    action=argparse.BooleanOptionalAction)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -31,7 +34,8 @@ def main():
         M.init_params(cfg, jax.random.PRNGKey(0)), policy)
 
     engine = ServingEngine(cfg, params, policy=policy, max_slots=3,
-                           max_len=64, prefill_chunk=8)
+                           max_len=64, prefill_chunk=8,
+                           overlap=args.overlap)
 
     # six requests with heterogeneous prompt lengths and per-request
     # sampling — only three slots, so admission happens mid-decode
@@ -45,17 +49,33 @@ def main():
         engine.submit(Request(prompt=prompt, max_new_tokens=args.gen,
                               sampling=sampling, seed=i))
 
-    # events() streams FinishedRequest objects the moment each completes
-    for fin in engine.events():
-        mode = "greedy" if fin.id % 2 == 0 else "top-k sampled"
-        print(f"req {fin.id:2d} [{mode:13s}] prompt={fin.prompt_len:2d} "
-              f"ticks {fin.admitted_tick:3d}-{fin.finished_tick:3d} "
-              f"-> {fin.tokens}")
+    # events() streams RequestOutput objects: one per sampled token, plus
+    # a terminal event per request (under overlap, samples drain one tick
+    # behind the dispatch that produced them)
+    for out in engine.events():
+        if out.finished:
+            mode = "greedy" if out.id % 2 == 0 else "top-k sampled"
+            print(f"req {out.id:2d} [{mode:13s}] prompt={out.prompt_len:2d} "
+                  f"ticks {out.admitted_tick:3d}-{out.tick:3d} "
+                  f"-> {out.tokens}")
+        else:
+            print(f"req {out.id:2d} +{out.new_tokens[0]:5d}  "
+                  f"({len(out.tokens):2d}/{args.gen} @ tick {out.tick})")
+
+    # stream() narrows the event loop to a single request
+    prompt = jax.random.randint(jax.random.PRNGKey(99), (9,), 0, cfg.vocab)
+    print("streaming one more request:", end=" ", flush=True)
+    for out in engine.stream(Request(prompt=prompt, max_new_tokens=8)):
+        print(out.new_tokens[0] if out.new_tokens else "", end=" ",
+              flush=True)
+    print()
 
     st = engine.stats()
     print(f"done: {st['prompt_tokens']} prompt + {st['generated_tokens']} "
           f"generated tokens over {st['ticks']} ticks, "
-          f"slot utilization {st['slot_utilization']:.0%}")
+          f"slot utilization {st['slot_utilization']:.0%}, "
+          f"sample syncs/token {st['sample_syncs_per_token']:.2f} "
+          f"({'overlap' if args.overlap else 'sync'} loop)")
 
 
 if __name__ == "__main__":

@@ -2,15 +2,24 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_14b --reduced \
         --requests 8 --slots 4 --prompt-len 32 --mixed --gen 16 \
-        --policy flexpe-fxp8 --backend pallas
+        --policy flexpe-fxp8 --backend pallas --stream
 
-Builds a `serving.ServingEngine` (slot pool + ragged per-request KV cache),
-submits `--requests` generation requests — with heterogeneous prompt
-lengths under `--mixed` — and streams completions. Prefill is chunked
-(`--prefill-chunk` tokens per jitted call, bulk KV write); decode admits
-pending requests into slots the moment one finishes. The Flex-PE policy
+Builds a `serving.ServingEngine` (scheduler/executor split over the slot
+pool + ragged per-request KV cache), submits `--requests` generation
+requests — with heterogeneous prompt lengths under `--mixed` — and
+consumes the `RequestOutput` event stream: per-token deltas printed live
+under `--stream`, completion summaries otherwise. The Flex-PE policy
 applies end-to-end: quantized matmuls, CORDIC attention softmax, FxP8
 quantized KV cache storage.
+
+`--overlap` (default; `--no-overlap` for the sync loop) runs the
+overlap-dispatch engine loop: the executor feeds each slot's sampled
+token back on-device, so the host enqueues tick N+1's decode before
+syncing tick N's samples — the device→host sample sync overlaps the next
+tick's compute instead of idling the array, which `stats()` exposes as
+`sample_syncs_per_token` (~0 overlapped vs 1.0 sync). The two loops are
+bit-exact. `--scheduler fifo|spf` picks the admission policy
+(shortest-prompt-first minimizes mean TTFT on mixed workloads).
 
 `--backend` selects the kernel backend (see core/backend.py):
 reference (fake-quant float path), pallas (real packed-int fxp_gemm +
@@ -25,7 +34,7 @@ are chain-hashed and shared copy-on-write, so requests with a common
 system prompt (`--shared-prefix N` prepends one to every generated
 request) skip prefill for the matched blocks and share their physical KV.
 Decode stays bit-exact vs the unshared paged and contiguous layouts —
-`benchmarks/ci_smoke.py` gates that on every CI run.
+`benchmarks/ci_smoke.py` gates that on every CI run, overlapped and sync.
 """
 from __future__ import annotations
 
@@ -40,6 +49,7 @@ from ..core.backend import BACKENDS
 from ..core.qtensor import packed_bytes, quantize_params
 from ..models import model as M
 from ..serving import Request, SamplingParams, ServingEngine
+from ..serving.scheduler import POLICIES
 from .mesh import make_host_mesh
 from .train import policy_from_name
 
@@ -93,6 +103,18 @@ def main(argv=None):
                     help="heterogeneous prompt lengths across requests")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--overlap", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="overlap-dispatch loop: enqueue the next tick's "
+                         "decode before syncing this tick's samples "
+                         "(bit-exact vs --no-overlap)")
+    ap.add_argument("--scheduler", default="fifo", choices=list(POLICIES),
+                    help="admission policy: fifo, or spf (shortest prompt "
+                         "first — lower mean TTFT on mixed workloads)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they arrive (per-token "
+                         "RequestOutput deltas) instead of completion "
+                         "summaries")
     ap.add_argument("--kv-block-size", type=int, default=0,
                     help="paged KV cache: tokens per pool block (0 = "
                          "contiguous per-slot max_len windows)")
@@ -139,7 +161,8 @@ def main(argv=None):
             prefill_chunk=args.prefill_chunk, seed=args.seed, mesh=mesh,
             kv_block_size=args.kv_block_size or None,
             kv_blocks=args.kv_blocks or None,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache,
+            scheduler=args.scheduler, overlap=args.overlap)
         reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
                              mixed=args.mixed, temp=args.temp,
                              top_k=args.top_k, seed=args.seed,
@@ -148,12 +171,17 @@ def main(argv=None):
         for r in reqs:
             engine.submit(r)
         finished = []
-        for fin in engine.events():   # stream completions as slots drain
-            print(f"  req {fin.id} done ({fin.finish_reason}) "
-                  f"prompt={fin.prompt_len} toks={fin.tokens[:8]}"
-                  f"{'...' if len(fin.tokens) > 8 else ''} "
-                  f"[ticks {fin.admitted_tick}-{fin.finished_tick}]")
-            finished.append(fin)
+        for out in engine.events():   # RequestOutput per-token stream
+            if args.stream and out.new_tokens:
+                print(f"  req {out.id} +{out.new_tokens} "
+                      f"(tick {out.tick}, {len(out.tokens)} total)")
+            if out.finished:
+                if not args.stream:
+                    print(f"  req {out.id} done ({out.finish_reason}) "
+                          f"prompt={out.prompt_len} toks={out.tokens[:8]}"
+                          f"{'...' if len(out.tokens) > 8 else ''} "
+                          f"[ticks {out.admitted_tick}-{out.tick}]")
+                finished.append(out.to_finished())
         dt = time.time() - t0
     st = engine.stats()
     total = st["prompt_tokens"] + st["generated_tokens"]
@@ -161,6 +189,11 @@ def main(argv=None):
           f"{total / dt:.1f} tok/s, slot utilization "
           f"{st['slot_utilization']:.0%} "
           f"(policy {args.policy}, backend {args.backend}, arch {cfg.name})")
+    print(f"loop: {'overlap' if args.overlap else 'sync'}, scheduler "
+          f"{st['scheduler_policy']}, sample syncs/token "
+          f"{st['sample_syncs_per_token']:.2f}, queue wait "
+          f"mean {st['queue_wait_ticks_mean']:.1f} / "
+          f"max {st['queue_wait_ticks_max']} ticks")
     if engine.paged:
         print(f"paged KV: {st['kv_blocks']} blocks x {st['kv_block_size']} "
               f"tokens, peak in use {st['peak_blocks_used']}")

@@ -1,7 +1,15 @@
-"""Continuous-batching serving subsystem (slot pool + ragged KV cache,
-paged block pool with copy-on-write prefix sharing)."""
-from .engine import FinishedRequest, Request, SamplingParams, ServingEngine
+"""Continuous-batching serving subsystem: a pure-host `Scheduler`
+(admission, slot/block policy, prefix matching), a device-owning
+`ModelExecutor` (compiled steps, coalesced control mirrors, on-device
+sampled-token feedback), and a thin `ServingEngine` loop with sync and
+overlap-dispatch modes streaming `RequestOutput` events."""
+from .api import FinishedRequest, Request, RequestOutput, SamplingParams
+from .engine import ServingEngine
+from .executor import ModelExecutor
 from .prefix_cache import PrefixCache
+from .scheduler import (POLICIES, Scheduler, SchedulingPolicy,
+                        ShortestPromptFirst)
 
-__all__ = ["Request", "FinishedRequest", "SamplingParams", "ServingEngine",
-           "PrefixCache"]
+__all__ = ["Request", "RequestOutput", "FinishedRequest", "SamplingParams",
+           "ServingEngine", "Scheduler", "SchedulingPolicy",
+           "ShortestPromptFirst", "POLICIES", "ModelExecutor", "PrefixCache"]

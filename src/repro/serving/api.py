@@ -1,0 +1,87 @@
+"""Public request/response types of the serving API.
+
+The engine's output surface is the `RequestOutput` event stream: one event
+per sampled token (`new_tokens` is that tick's delta, `tokens` the
+cumulative generation) plus a terminal event with `finished=True` and a
+`finish_reason`. `FinishedRequest` survives as a deprecated completion-only
+view (`RequestOutput.to_finished()`); `ServingEngine.run()` still returns
+it so completion-style callers keep working unchanged.
+
+Nothing in this module touches jax — the types are shared by the pure-host
+`Scheduler` and the device-owning `ModelExecutor` without dragging either
+one's dependencies into the other.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration (temperature<=0 -> greedy)."""
+    temperature: float = 0.0
+    top_k: int = 0          # 0 -> no top-k filter
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `prompt` is a [P] int token array/list (or
+    [P, d_model] float embeds for embeds-mode archs)."""
+    prompt: Any
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    seed: Optional[int] = None      # None -> derived from engine seed + id
+    id: Optional[int] = None        # assigned at submit() when None
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """Deprecated completion-only view of a finished request — the pre-
+    streaming API. New code should consume `RequestOutput` events; this
+    remains the return type of `ServingEngine.run()`."""
+    id: int
+    prompt: Any
+    tokens: List[int]               # generated tokens (incl. EOS if hit)
+    finish_reason: str              # 'eos' | 'length' | 'aborted'
+    prompt_len: int
+    admitted_tick: int
+    finished_tick: int
+    prefix_hit_tokens: int = 0      # prompt tokens served from the cache
+    ttft_s: float = 0.0         # submit -> first sampled token (monotonic)
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One event in a request's output stream.
+
+    A non-terminal event carries this tick's sampled token(s) in
+    `new_tokens` (`tokens` is the cumulative generation so far). The
+    terminal event has `finished=True`, a `finish_reason`, and the
+    completion metadata (`ttft_s`, `prefix_hit_tokens`, tick bounds);
+    an abort produces a terminal event with `finish_reason='aborted'`
+    and whatever tokens had drained by then.
+    """
+    id: int
+    new_tokens: List[int]
+    tokens: List[int]
+    prompt_len: int
+    tick: int
+    finished: bool = False
+    finish_reason: Optional[str] = None   # 'eos' | 'length' | 'aborted'
+    prompt: Any = None
+    admitted_tick: int = -1
+    prefix_hit_tokens: int = 0
+    ttft_s: float = 0.0
+
+    def to_finished(self) -> FinishedRequest:
+        """Deprecated-view conversion; only terminal events convert."""
+        if not self.finished:
+            raise ValueError("only a finished RequestOutput converts to "
+                             "FinishedRequest")
+        return FinishedRequest(
+            id=self.id, prompt=self.prompt, tokens=self.tokens,
+            finish_reason=self.finish_reason, prompt_len=self.prompt_len,
+            admitted_tick=self.admitted_tick, finished_tick=self.tick,
+            prefix_hit_tokens=self.prefix_hit_tokens, ttft_s=self.ttft_s)

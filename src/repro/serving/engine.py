@@ -1,201 +1,111 @@
-"""Continuous-batching serving engine — slot pool over the ragged cache.
+"""Continuous-batching serving engine — scheduler/executor split with an
+async, overlap-dispatch loop.
 
-The software analogue of Flex-PE's time-multiplexed PE array: a fixed pool
-of `max_slots` decode slots (jit-stable shapes) whose rows never have to
-start or finish together. Each slot holds one request's KV/SSM cache row;
-`cache["lengths"][slot]` is that request's private position counter.
+The engine is the software analogue of Flex-PE's time-multiplexed PE
+array, and this module is deliberately thin: all host policy (admission,
+slot assignment, block reservation, prefix matching) lives in
+`scheduler.Scheduler`, all device state (compiled steps, cache, control-
+array mirrors, the sampled-token feedback buffer) lives in
+`executor.ModelExecutor`, and the engine just runs the tick loop between
+them and turns drained samples into `RequestOutput` events.
 
 One engine tick runs two kinds of jitted step, both jit-stable shapes:
 
   * per-slot chunked prefill — tokens [1, prefill_chunk] against ONE
-    slot's cache row (sliced out of the pool by a traced slot index): each
-    slot mid-prompt bulk-writes up to a chunk of its prompt per tick.
-    Prefill compute scales with the admitted prompt, not the pool width.
-  * pool decode — tokens [B, 1] with per-row `n_valid` (1 for rows at the
-    generation frontier, 0 for idle/prefilling rows, whose cache rows stay
-    bit-untouched). Decoding slots emit a token on every tick even while
-    newly admitted requests prefill — no slot ever stalls.
+    slot's cache row (sliced out of the pool by a traced slot index).
+  * fused pool decode + sample — tokens [B, 1] read from the executor's
+    device-resident token buffer, per-row `n_valid` (0 rows stay
+    bit-untouched), sampled tokens written straight back into the
+    buffer on device.
 
-Admission happens between ticks: a finished slot (EOS or max tokens) is
-released immediately and the next pending request starts prefilling into
-it mid-flight, with its position counter reset — stale cache above a
-row's length is masked per row, so slot reuse needs no cache zeroing.
+Because the feedback buffer closes the decode loop on device, the host
+never needs a sampled token's *value* to build the next dispatch — only
+to emit events and detect EOS. That enables two loop modes, bit-exact
+with each other (both run the identical dispatch sequence; per-request
+outputs are additionally batch-composition independent, the long-standing
+engine invariant):
 
-Paged KV mode (`kv_block_size`): instead of one contiguous max_len window
-per slot, attention caches live in a global block pool
-[L, kv_blocks, block_size, KV, hd] addressed through per-slot block
-tables, so cache HBM scales with tokens actually held, not
-slots x worst-case length. Admission reserves a request's worst-case
-block count (queueing FIFO when the pool can't cover it — never stalling
-an admitted request mid-flight); physical blocks are claimed as the
-request's frontier crosses block boundaries and released by refcount.
-Decode is bit-exact vs the contiguous layout: the gathered block view
-reconstructs the same masked cache every step. SSM state is a dense
-per-slot recurrent carry either way.
+  * `overlap=False` (default): each tick's samples are synced to the
+    host immediately after dispatch — the pre-split behaviour, with
+    exact legacy tick timing.
+  * `overlap=True`: the host enqueues tick N+1's dispatches *before*
+    syncing tick N's samples, draining one tick behind, so the
+    device→host sample sync overlaps the next tick's device compute
+    instead of idling the array. Length finishes are predicted from the
+    host-side scheduled count and release their slot at DISPATCH time,
+    so admission timing stays identical to the sync loop; only EOS —
+    unknowable until the sampled value syncs — is detected one tick
+    late, bounded and accounted (at most one discarded decode per EOS'd
+    request, counted in `wasted_decodes`, with its slot release lagging
+    that one tick). `sample_syncs_per_token` in `stats()` exposes the
+    win as a counter: the fraction of emitted tokens whose device→host
+    sync gated the next dispatch (1.0 sync, ~0 overlapped).
 
-Prefix caching (`prefix_cache=True`, paged attention families only):
-full blocks of prompt tokens are chain-hashed into a host-side
-`PrefixCache` as they prefill. A newly admitted request matches the
-longest cached block-aligned prefix of its prompt, points its block table
-at the shared physical blocks (per-block refcounts), and starts prefill
-at the matched boundary — the shared KV is neither recomputed nor
-re-stored. A full-prompt match recomputes only the final token, forking
-the block it appends into via copy-on-write (`model.copy_pool_blocks`),
-so writers diverge while readers keep bit-identical KV. Release only
-returns fully-unreferenced, uncached blocks to the free list; cached but
-unheld blocks are evicted LRU when allocation needs them. SSM/hybrid
-state is a recurrence with no block structure, so those families keep
-prefix caching off (decode is unchanged either way).
+The public output surface is the `RequestOutput` event stream —
+`events()` yields per-token deltas plus finish events, `stream(request)`
+narrows that to one request, `abort(id)` releases queued or in-flight
+requests with refcounted block return — while `run()` keeps returning
+the deprecated `FinishedRequest` completion view.
 
-Host-to-device control writes are coalesced per tick: admission, prefix
-matching, and block allocation all mutate host mirrors of `lengths` /
-`block_tables`, flushed as at most one device update each before the
-tick's jitted steps dispatch — never one dispatch per admitted slot or
-per allocated block.
-
-Sampling is per-request: greedy / temperature / top-k from
-`Request.sampling`, with a per-request RNG key (folded per emitted token),
-so a request's sampled tokens are independent of whatever happens to be
-co-scheduled with it. Duplicate in-flight request ids are rejected at
-`submit` — two live requests with one id would share a fold_in RNG
-stream and interleave in `run()`'s sorted results.
-
-The jitted step functions come from `launch.steps.build_prefill_step(
-with_cache=True)` / `build_serve_step` — the same builders the dry-run and
-benchmarks use. On a multi-host mesh the builders' sharding trees apply to
-float params; QuantizedTensor sharding rules are a ROADMAP follow-up, so
-the engine jits without explicit in_shardings (single-host serving).
+Paged KV, copy-on-write prefix caching, per-request sampling/RNG, and
+the coalesced per-tick control-array writes are unchanged in semantics
+from the pre-split engine; see `scheduler.py` / `executor.py` for where
+each now lives.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from collections import deque
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..launch import steps as S
 from ..launch.mesh import make_host_mesh
-from ..models import model as M
+from .api import FinishedRequest, Request, RequestOutput, SamplingParams
+from .executor import ModelExecutor
 from .prefix_cache import PrefixCache
+from .scheduler import Scheduler, SchedulingPolicy, SlotState
 
-#: compiled (prefill, decode) step pairs shared across engine instances —
-#: keyed on everything that shapes the computation, so spinning up a new
-#: engine against the same (cfg, policy, pool geometry) costs no recompile
-_STEP_CACHE: dict = {}
-
-
-def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk,
-                    kv_block_size=None, kv_blocks=None):
-    key = (cfg, policy, mesh, max_slots, alloc, chunk, kv_block_size,
-           kv_blocks)
-    if key not in _STEP_CACHE:
-        prefill_fn, *_ = S.build_prefill_step(
-            cfg, mesh, policy, with_cache=True, batch=max_slots,
-            max_len=alloc, chunk=chunk, kv_block_size=kv_block_size,
-            kv_blocks=kv_blocks)
-        decode_fn, *_ = S.build_serve_step(
-            cfg, mesh, policy, batch=max_slots, max_len=alloc, chunk=1,
-            kv_block_size=kv_block_size, kv_blocks=kv_blocks)
-        _STEP_CACHE[key] = (jax.jit(prefill_fn, donate_argnums=(1,)),
-                            jax.jit(decode_fn, donate_argnums=(1,)))
-    return _STEP_CACHE[key]
-
-
-@functools.partial(jax.jit, static_argnums=(0,))
-def _sample_tokens(vocab: int, logits, keys, temps, topks):
-    """logits [R, V*] -> tokens [R]: per-row greedy / temperature / top-k."""
-    lg = logits[:, :vocab].astype(jnp.float32)
-    greedy = jnp.argmax(lg, axis=-1)
-    srt = jnp.sort(lg, axis=-1)[:, ::-1]
-    kidx = jnp.clip(topks - 1, 0, vocab - 1)
-    thresh = jnp.take_along_axis(srt, kidx[:, None], axis=1)
-    filt = jnp.where((topks[:, None] > 0) & (lg < thresh), -jnp.inf, lg)
-    scaled = filt / jnp.maximum(temps, 1e-6)[:, None]
-    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
-    return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)
-
-
-@dataclasses.dataclass(frozen=True)
-class SamplingParams:
-    """Per-request sampling configuration (temperature<=0 -> greedy)."""
-    temperature: float = 0.0
-    top_k: int = 0          # 0 -> no top-k filter
+__all__ = ["ServingEngine", "Request", "RequestOutput", "FinishedRequest",
+           "SamplingParams"]
 
 
 @dataclasses.dataclass
-class Request:
-    """One generation request. `prompt` is a [P] int token array/list (or
-    [P, d_model] float embeds for embeds-mode archs)."""
-    prompt: Any
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
-    seed: Optional[int] = None      # None -> derived from engine seed + id
-    id: Optional[int] = None        # assigned at submit() when None
-
-
-@dataclasses.dataclass
-class FinishedRequest:
-    id: int
-    prompt: Any
-    tokens: List[int]               # generated tokens (incl. EOS if hit)
-    finish_reason: str              # 'eos' | 'length'
-    prompt_len: int
-    admitted_tick: int
-    finished_tick: int
-    prefix_hit_tokens: int = 0      # prompt tokens served from the cache
-    ttft_s: float = 0.0         # submit -> first sampled token (monotonic)
-
-
-class _Slot:
-    """Host-side state of one occupied decode slot."""
-
-    def __init__(self, request: Request, key, tick: int,
-                 blocks_need: int = 0):
-        self.request = request
-        self.key = key                       # per-request base PRNG key
-        self.prefill_pos = 0                 # prompt tokens consumed
-        self.generated: List[int] = []
-        self.next_input: Optional[int] = None  # last sampled token
-        self.admitted_tick = tick
-        self.cache_len = 0                   # tokens written to the cache
-        self.blocks_need = blocks_need       # worst-case paged reservation
-        self.blocks: List[int] = []          # pool blocks held (paged mode)
-        self.prefix_hit = 0                  # prompt tokens matched cached
-        self.prefix_keys: List[str] = []     # chain keys of full blocks
-        self.registered = 0                  # prompt blocks offered to cache
-        self.first_token_time: Optional[float] = None
-
-    @property
-    def prompt_len(self) -> int:
-        return len(self.request.prompt)
-
-    @property
-    def prefilling(self) -> bool:
-        return self.prefill_pos < self.prompt_len
+class _InFlight:
+    """One dispatched tick whose sampled tokens are not yet host-synced."""
+    tick: int
+    dec: List                    # [(row, SlotState, token_index)]
+    dec_toks: Any                # device [max_slots] or None
+    pf: List                     # [(row, SlotState, token_index)]
+    pf_toks: Any                 # device [len(pf)] or None
 
 
 class ServingEngine:
-    """Slot-based continuous-batching engine over `models.model.decode_step`.
+    """Slot-based continuous-batching engine over the scheduler/executor
+    split.
 
     Usage:
         eng = ServingEngine(cfg, params, policy=pol, max_slots=4,
-                            max_len=256)
+                            max_len=256, overlap=True)
         eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=8))
-        for fin in eng.events():       # streams FinishedRequest
+        for out in eng.events():        # RequestOutput per-token stream
+            print(out.id, out.new_tokens, out.finished)
+
+        for out in eng.stream(Request(prompt=[1, 2, 3])):   # one request
             ...
+
+        done = eng.run(reqs)            # deprecated completion-only view
     """
 
     def __init__(self, cfg, params, policy=None, max_slots: int = 4,
                  max_len: int = 256, prefill_chunk: int = 32, seed: int = 0,
                  mesh=None, kv_block_size: Optional[int] = None,
-                 kv_blocks: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 kv_blocks: Optional[int] = None, prefix_cache: bool = False,
+                 scheduler: Union[str, SchedulingPolicy] = "fifo",
+                 overlap: bool = False):
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -203,6 +113,7 @@ class ServingEngine:
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.seed = seed
+        self.overlap = overlap
         self.mesh = mesh if mesh is not None else make_host_mesh()
         if kv_blocks is not None and kv_block_size is None:
             raise ValueError("kv_blocks requires kv_block_size (a pool size "
@@ -212,274 +123,108 @@ class ServingEngine:
                              "sharing is a property of the paged layout)")
         self.kv_block_size = kv_block_size
 
-        # over-allocate by one chunk: a ragged write window [len, len+chunk)
-        # must stay in bounds for every row with len < max_len (see
-        # layers.ragged_cache_update)
-        alloc = max_len + prefill_chunk
-        self.cache = M.init_cache(cfg, max_slots, alloc, policy,
-                                  kv_block_size=kv_block_size,
-                                  kv_blocks=kv_blocks)
-        # paged mode: a request's KV lives in pool blocks its table points
-        # at, not a private max_len window. Admission reserves its
-        # worst-case block count (so an admitted request can always finish);
-        # physical blocks are claimed off the free list on demand as its
-        # prefill/decode frontier crosses block boundaries, held by
-        # refcount (prefix sharing can put several slots on one block),
-        # and recycled only when fully unreferenced and uncached.
-        self.paged = "block_tables" in self.cache
-        self._committed = 0          # worst-case blocks promised to slots
-        if self.paged:
-            self.num_blocks = int(self.cache["kv"]["k"].shape[1])
-            self._free: List[int] = list(range(self.num_blocks))
-            self._ref = np.zeros((self.num_blocks,), np.int32)  # slot holds
-            self._cached_unheld = 0      # cached blocks with zero slot refs
-            self.peak_blocks_used = 0
-            kv_blocks = self.num_blocks
+        self.ex = ModelExecutor(cfg, params, policy=policy, mesh=self.mesh,
+                                max_slots=max_slots, max_len=max_len,
+                                prefill_chunk=prefill_chunk,
+                                kv_block_size=kv_block_size,
+                                kv_blocks=kv_blocks)
         # prefix caching shares KV across requests at block granularity;
         # SSM/hybrid carry a recurrence that cannot be entered mid-stream,
         # so for those families the flag degrades to a no-op
-        self._prefix = (PrefixCache(kv_block_size)
-                        if prefix_cache and self.paged
-                        and "ssm" not in self.cache else None)
-        self.cow_copies = 0
+        prefix = (PrefixCache(kv_block_size)
+                  if prefix_cache and self.ex.paged and not self.ex.has_ssm
+                  else None)
+        self.sched = Scheduler(
+            max_slots, max_len, policy=scheduler,
+            kv_block_size=kv_block_size if self.ex.paged else None,
+            num_blocks=self.ex.num_blocks, paged=self.ex.paged,
+            has_ssm=self.ex.has_ssm, prefix_cache=prefix)
 
-        # host mirrors of the device-side control arrays: admission and
-        # block allocation write here, `_flush_host_updates` applies each
-        # tick's mutations as ONE device update per array (never one
-        # dispatch per slot or per block)
-        self._lengths_host = np.zeros((max_slots,), np.int32)
-        self._lengths_dirty = False
-        if self.paged:
-            mb = self.cache["block_tables"].shape[1]
-            self._tables_host = np.zeros((max_slots, mb), np.int32)
-            self._tables_dirty = False
-        self._ssm_reset_rows: List[int] = []
-        self.h2d_updates = 0         # control-array device writes (flushes)
-
-        self._prefill, self._decode = _compiled_steps(
-            cfg, policy, self.mesh, max_slots, alloc, prefill_chunk,
-            kv_block_size if self.paged else None,
-            kv_blocks if self.paged else None)
-
-        self.slots: List[Optional[_Slot]] = [None] * max_slots
-        self.pending: deque = deque()
         self.tick = 0
-        self._next_id = 0
-        self._active_ids: set = set()     # pending + in-flight request ids
-        self._submit_time: dict = {}
+        self._inflight: deque = deque()      # dispatched, not yet drained
+        self._out_buffer: deque = deque()    # events awaiting a consumer
         # cumulative stats
         self.prompt_tokens = 0
         self.generated_tokens = 0
+        self.emitted_tokens = 0              # incl. tokens of live requests
         self.busy_slot_ticks = 0
         self.total_slot_ticks = 0
         self.prefill_tokens_computed = 0
-        self.prefix_tokens_reused = 0
+        self.sample_sync_tokens = 0          # tokens whose sync gated dispatch
+        self.wasted_decodes = 0              # overlap: post-EOS/abort drains
+        self.aborted_requests = 0
 
-    # -- request lifecycle --------------------------------------------------
+    # -- compatibility views -------------------------------------------------
 
-    def _blocks_need(self, request: Request) -> int:
-        """Worst-case pool blocks this request can ever hold."""
-        bs = self.kv_block_size
-        return -(-(len(request.prompt) + request.max_new_tokens) // bs)
+    @property
+    def slots(self) -> List[Optional[SlotState]]:
+        return self.sched.slots
+
+    @property
+    def pending(self) -> List[Request]:
+        return self.sched.pending
+
+    @property
+    def paged(self) -> bool:
+        return self.ex.paged
+
+    @property
+    def cache(self):
+        return self.ex.cache
+
+    # -- request lifecycle ---------------------------------------------------
 
     def submit(self, request: Request) -> int:
-        plen = len(request.prompt)
-        if plen < 1:
-            raise ValueError("empty prompt: a request needs at least one "
-                             "token to prefill")
-        if request.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        if plen + request.max_new_tokens > self.max_len:
-            raise ValueError(
-                f"prompt ({plen}) + max_new_tokens ({request.max_new_tokens})"
-                f" exceeds engine max_len ({self.max_len})")
-        if self.paged and self._blocks_need(request) > self.num_blocks:
-            raise ValueError(
-                f"request needs {self._blocks_need(request)} KV blocks but "
-                f"the pool only has {self.num_blocks}")
-        if request.id is None:
-            request.id = self._next_id
-        elif request.id in self._active_ids:
-            # two live requests with one id would share a fold_in RNG
-            # stream and interleave in run()'s sorted results
-            raise ValueError(
-                f"request id {request.id} is already pending or in flight; "
-                "ids must be unique among live requests")
-        self._next_id = max(self._next_id, request.id) + 1
-        self._active_ids.add(request.id)
-        self._submit_time[request.id] = time.monotonic()
-        self.pending.append(request)
-        return request.id
+        return self.sched.submit(request, self.tick)
+
+    def abort(self, rid: int) -> bool:
+        """Release a queued or in-flight request. Queued requests leave
+        the pending queue (their submit bookkeeping dropped); in-flight
+        requests free their slot with refcounted block return — any
+        still-dispatched device work targeting the slot is discarded at
+        drain time. Emits a terminal `finish_reason='aborted'` event
+        carrying the tokens drained so far. Returns False when `rid` is
+        unknown or already finished."""
+        req = self.sched.abort_pending(rid)
+        if req is not None:
+            self.aborted_requests += 1
+            self._out_buffer.append(RequestOutput(
+                id=rid, new_tokens=[], tokens=[],
+                prompt_len=len(req.prompt), tick=self.tick, finished=True,
+                finish_reason="aborted", prompt=req.prompt))
+            return True
+        found = self.sched.find_slot(rid)
+        if found is None:
+            return False
+        b, slot = found
+        slot.done = True                 # in-flight drains become discards
+        self.sched.release(b)
+        self.aborted_requests += 1
+        # work done before the abort still counts toward throughput:
+        # prompt tokens actually prefilled + tokens actually drained (so
+        # tok/s and sample_syncs_per_token keep describing one stream)
+        self.prompt_tokens += slot.prefill_pos
+        self.generated_tokens += len(slot.generated)
+        self._out_buffer.append(RequestOutput(
+            id=rid, new_tokens=[], tokens=list(slot.generated),
+            prompt_len=slot.prompt_len, tick=self.tick, finished=True,
+            finish_reason="aborted", prompt=slot.request.prompt,
+            admitted_tick=slot.admitted_tick,
+            prefix_hit_tokens=slot.prefix_hit))
+        return True
 
     def has_work(self) -> bool:
-        return bool(self.pending) or any(s is not None for s in self.slots)
+        return (self.sched.has_work() or bool(self._inflight)
+                or bool(self._out_buffer))
 
     def _request_key(self, req: Request):
         if req.seed is not None:
             return jax.random.PRNGKey(req.seed)
         return jax.random.fold_in(jax.random.PRNGKey(self.seed), req.id)
 
-    # -- paged block allocator ---------------------------------------------
+    # -- one engine tick -----------------------------------------------------
 
-    def _alloc_block(self) -> int:
-        """Claim an unreferenced physical block: pop the free list, or
-        evict the LRU cached-but-unheld prefix block. Unreachable under
-        reservation admission unless the pool is fully committed AND the
-        prefix cache holds nothing evictable — which reservation rules
-        out (an admitted request's worst case is always covered by free
-        plus evictable blocks)."""
-        if self._free:
-            blk = self._free.pop()
-        else:
-            blk = (self._prefix.evict_lru(lambda b: self._ref[b] == 0)
-                   if self._prefix is not None else None)
-            if blk is None:
-                raise RuntimeError("KV block pool exhausted mid-flight")
-            self._cached_unheld -= 1     # the evicted entry was unheld
-        # peak CONCURRENT demand (what to size kv_blocks from): blocks
-        # held by in-flight requests plus this one — cached-but-unheld
-        # residency is reclaimable and must not inflate the high-water
-        # mark, so it is subtracted back out. `_cached_unheld` is
-        # maintained incrementally (ref 0<->1 transitions, evictions):
-        # this hot path never scans the cache.
-        in_use = (self.num_blocks - len(self._free) - self._cached_unheld)
-        self.peak_blocks_used = max(self.peak_blocks_used, in_use)
-        return blk
-
-    def _unref(self, blk: int):
-        """Drop one slot's hold on `blk`; recycle it only when no slot
-        references it AND it doesn't back a prefix-cache entry (cached
-        blocks stay resident, evictable LRU when allocation needs them)."""
-        self._ref[blk] -= 1
-        if self._ref[blk] == 0:
-            if self._prefix is not None and self._prefix.holds(blk):
-                self._cached_unheld += 1     # stays resident, evictable
-            else:
-                self._free.append(blk)
-
-    def _match_prefix(self, b: int, slot: _Slot) -> int:
-        """Point slot b's table at the longest cached block-aligned prefix
-        of its prompt; returns the starting prefill position (0 = cold).
-        A full-prompt match still recomputes the final token (sampling
-        needs its logits), which appends into the last matched block —
-        that block is forked copy-on-write so the cached KV and any other
-        holder stay bit-identical."""
-        slot.prefix_keys = self._prefix.block_keys(slot.request.prompt)
-        blocks = self._prefix.match(slot.prefix_keys)
-        if not blocks:
-            return 0
-        bs = self.kv_block_size
-        matched = len(blocks) * bs
-        start = min(matched, slot.prompt_len - 1)
-        for i, blk in enumerate(blocks):
-            if self._ref[blk] == 0:
-                self._cached_unheld -= 1     # cached block gains a holder
-            self._ref[blk] += 1
-            self._tables_host[b, i] = blk
-            slot.blocks.append(blk)
-        self._tables_dirty = True
-        if start < matched:
-            # copy-on-write fork: our ref on src keeps it un-evictable
-            # while the replacement block is claimed
-            src = blocks[-1]
-            dst = self._alloc_block()
-            self.cache = M.copy_pool_blocks(
-                self.cache, np.asarray([src], np.int32),
-                np.asarray([dst], np.int32))
-            self.cow_copies += 1
-            self._ref[dst] += 1
-            self._unref(src)
-            slot.blocks[-1] = dst
-            self._tables_host[b, len(blocks) - 1] = dst
-        slot.prefix_hit = start
-        slot.registered = len(blocks)     # shared blocks are already cached
-        self.prefix_tokens_reused += start
-        return start
-
-    def _register_prefix_blocks(self, b: int, slot: _Slot):
-        """Offer slot b's newly completed full prompt blocks to the cache
-        (first writer wins; losers keep their private copy)."""
-        if self._prefix is None:
-            return
-        full = min(slot.cache_len, slot.prompt_len) // self.kv_block_size
-        for i in range(slot.registered, full):
-            self._prefix.insert(slot.prefix_keys[i], slot.blocks[i])
-        slot.registered = max(slot.registered, full)
-
-    def _admit(self):
-        for b in range(self.max_slots):
-            if self.slots[b] is None and self.pending:
-                req = self.pending[0]
-                need = self._blocks_need(req) if self.paged else 0
-                if self.paged and self._committed + need > self.num_blocks:
-                    # pool exhausted: the request queues (FIFO — no
-                    # head-of-line skipping) until finished requests
-                    # return enough blocks for its worst case, which
-                    # guarantees an admitted request never stalls
-                    # mid-flight waiting for a block
-                    break
-                self.pending.popleft()
-                slot = _Slot(req, self._request_key(req), self.tick,
-                             blocks_need=need)
-                self.slots[b] = slot
-                self._committed += need
-                start = 0
-                if self.paged:
-                    # hygiene: a fresh table row points at block 0 until
-                    # blocks are claimed (reads above the row's length
-                    # are masked either way)
-                    self._tables_host[b, :] = 0
-                    self._tables_dirty = True
-                    if self._prefix is not None:
-                        start = self._match_prefix(b, slot)
-                # the row's position counter starts at the matched prefix
-                # boundary (0 when cold); stale KV above a row's length is
-                # masked per row, so the KV cache needs no zeroing
-                slot.prefill_pos = start
-                slot.cache_len = start
-                self._lengths_host[b] = start
-                self._lengths_dirty = True
-                if "ssm" in self.cache:
-                    # SSM state is a recurrent carry, not a masked window —
-                    # a reused slot must start from the zero state
-                    self._ssm_reset_rows.append(b)
-
-    def _ensure_blocks(self, b: int, upto: int):
-        """Grow slot b's block table to cover logical positions [0, upto):
-        claim blocks and write them into the host table mirror (flushed
-        once per tick)."""
-        slot = self.slots[b]
-        need = -(-upto // self.kv_block_size)
-        while len(slot.blocks) < need:
-            blk = self._alloc_block()
-            self._ref[blk] += 1
-            self._tables_host[b, len(slot.blocks)] = blk
-            self._tables_dirty = True
-            slot.blocks.append(blk)
-
-    def _flush_host_updates(self):
-        """Apply this tick's admission / allocation mutations to the device
-        control arrays — at most one update per array per tick, however
-        many slots were admitted or blocks claimed."""
-        if self._ssm_reset_rows:
-            rows = np.asarray(sorted(set(self._ssm_reset_rows)), np.int32)
-            self.cache["ssm"] = tuple(
-                a.at[:, rows].set(jnp.zeros((), a.dtype))
-                for a in self.cache["ssm"])
-            self._ssm_reset_rows.clear()
-            self.h2d_updates += 1
-        if self._lengths_dirty:
-            self.cache["lengths"] = jnp.asarray(self._lengths_host)
-            self._lengths_dirty = False
-            self.h2d_updates += 1
-        if self.paged and self._tables_dirty:
-            self.cache["block_tables"] = jnp.asarray(self._tables_host)
-            self._tables_dirty = False
-            self.h2d_updates += 1
-
-    # -- one engine tick ----------------------------------------------------
-
-    def _prefill_block(self, slot: "_Slot"):
+    def _prefill_block(self, slot: SlotState):
         """[1, chunk] block holding this slot's next prompt chunk."""
         cfg = self.cfg
         chunk = self.prefill_chunk
@@ -494,181 +239,212 @@ class ServingEngine:
         block[0, :take] = part
         return jnp.asarray(block, jnp.bfloat16), take
 
-    def _decode_block(self, rows):
-        """[B, 1] block carrying each frontier row's last sampled token."""
-        cfg = self.cfg
-        if cfg.input_mode == "tokens":
-            block = np.zeros((self.max_slots, 1), np.int64)
-            for b in rows:
-                block[b, 0] = self.slots[b].next_input
-            return jnp.asarray(block, jnp.int32)
-        # embeds-mode stubs feed the one-hot of the sampled token
-        block = np.zeros((self.max_slots, 1, cfg.d_model), np.float32)
-        for b in rows:
-            block[b, 0, self.slots[b].next_input % cfg.d_model] = 1.0
-        return jnp.asarray(block, jnp.bfloat16)
-
-    def step(self) -> List[FinishedRequest]:
-        """One engine tick: admit, advance every prefilling slot one chunk
-        (per-slot [1,chunk] calls), decode every frontier slot ([B,1]
-        call), sample, release finished slots. Returns the requests that
-        finished on this tick."""
-        self._admit()
-        if not any(s is not None for s in self.slots):
-            return []
+    def _dispatch_tick(self) -> bool:
+        """Admit, then enqueue this tick's device work (prefill chunks,
+        fused decode+sample, prefill-seed sampling) WITHOUT syncing any
+        sampled value. Returns False when there was nothing to dispatch."""
+        sched, ex = self.sched, self.ex
+        for _, slot in sched.admit(self.tick, ex):
+            slot.key = self._request_key(slot.request)
 
         # plan the whole tick first — prefill chunks and decode rows are
         # known before any dispatch, so block allocation and control-array
         # updates coalesce into one flush
-        prefill_plan = []                        # (row, tokens, take)
-        for b, slot in enumerate(self.slots):
-            if slot is not None and slot.prefilling:
+        occupied = [(b, s) for b, s in enumerate(sched.slots)
+                    if s is not None and not s.done]
+        prefill_plan = []                        # (row, slot, tokens, take)
+        for b, slot in occupied:
+            if slot.prefilling:
                 tokens, take = self._prefill_block(slot)
-                if self.paged:
-                    self._ensure_blocks(b, slot.cache_len + take)
-                prefill_plan.append((b, tokens, take))
-        dec_rows = [b for b, s in enumerate(self.slots)
-                    if s is not None and not s.prefilling
-                    and s.next_input is not None]
-        if self.paged:
-            for b in dec_rows:
-                self._ensure_blocks(b, self.slots[b].cache_len + 1)
-        self._flush_host_updates()
+                sched.ensure_blocks(b, slot.cache_len + take, ex)
+                prefill_plan.append((b, slot, tokens, take))
+        # decode rows hold a device-seeded token and have host headroom:
+        # length finishes are predicted from the SCHEDULED count, so a
+        # request never gets more than max_new_tokens samples dispatched
+        # even before its latest values drain
+        dec = [(b, s) for b, s in occupied
+               if not s.prefilling
+               and 0 < s.scheduled < s.request.max_new_tokens]
+        for b, s in dec:
+            sched.ensure_blocks(b, s.cache_len + 1, ex)
+        if not prefill_plan and not dec:
+            return False
+        ex.flush()
 
-        sample_logits = {}                       # row -> logits [V*]
         # 1) chunked prefill, one chunk per prefilling slot (B=1 calls);
         #    the final chunk's last-valid logits seed the first sample
-        for b, tokens, take in prefill_plan:
-            slot = self.slots[b]
-            lg, self.cache = self._prefill(
-                self.params, self.cache, tokens,
-                jnp.asarray([take], jnp.int32), jnp.int32(b))
+        pf_items, pf_rows, pf_logits = [], [], []
+        pf_keys, pf_temps, pf_topks = [], [], []
+        for b, slot, tokens, take in prefill_plan:
+            lg = ex.prefill(b, tokens, take)
             slot.prefill_pos += take
             slot.cache_len += take
-            self._lengths_host[b] += take        # mirror the step's +take
             self.prefill_tokens_computed += take
             if not slot.prefilling:
-                sample_logits[b] = lg[0]
-            self._register_prefix_blocks(b, slot)
+                pf_items.append((b, slot, slot.scheduled))
+                pf_rows.append(b)
+                pf_logits.append(lg)
+                pf_keys.append(jax.random.fold_in(slot.key, slot.scheduled))
+                pf_temps.append(slot.request.sampling.temperature)
+                pf_topks.append(slot.request.sampling.top_k)
+                slot.scheduled += 1
+            sched.register_prefix_blocks(b)
 
-        # 2) pool decode for rows already holding a sampled token
-        if dec_rows:
+        # 2) fused pool decode + sample for device-seeded frontier rows
+        dec_items, dec_toks = [], None
+        if dec:
             n_valid = np.zeros((self.max_slots,), np.int32)
-            n_valid[dec_rows] = 1
-            lg, self.cache = self._decode(
-                self.params, self.cache, self._decode_block(dec_rows),
-                jnp.asarray(n_valid))
-            for b in dec_rows:
-                sample_logits[b] = lg[b]
-                self.slots[b].cache_len += 1
-                self._lengths_host[b] += 1       # mirror the step's +1
+            keys = [_zero_key()] * self.max_slots
+            temps = np.zeros((self.max_slots,), np.float32)
+            topks = np.zeros((self.max_slots,), np.int32)
+            for b, s in dec:
+                n_valid[b] = 1
+                keys[b] = jax.random.fold_in(s.key, s.scheduled)
+                temps[b] = s.request.sampling.temperature
+                topks[b] = s.request.sampling.top_k
+                dec_items.append((b, s, s.scheduled))
+                s.scheduled += 1
+                s.cache_len += 1
+            dec_toks = ex.decode_and_sample(
+                n_valid, jnp.stack(keys), jnp.asarray(temps),
+                jnp.asarray(topks))
 
-        # 3) per-request sampling over every row that produced logits
-        rows = sorted(sample_logits)
-        finished: List[FinishedRequest] = []
-        if rows:
-            keys, temps, topks = [], [], []
-            for b in rows:
-                slot = self.slots[b]
-                keys.append(jax.random.fold_in(slot.key, len(slot.generated)))
-                temps.append(slot.request.sampling.temperature)
-                topks.append(slot.request.sampling.top_k)
-            toks = np.asarray(_sample_tokens(
-                self.cfg.vocab,
-                jnp.stack([sample_logits[b] for b in rows]),
-                jnp.stack(keys), jnp.asarray(np.asarray(temps, np.float32)),
-                jnp.asarray(np.asarray(topks, np.int32))))
-            now = time.monotonic()
-            for i, b in enumerate(rows):
-                slot = self.slots[b]
-                t = int(toks[i])
-                slot.generated.append(t)
-                slot.next_input = t
-                if slot.first_token_time is None:
-                    slot.first_token_time = now
-                req = slot.request
-                hit_eos = req.eos_id is not None and t == req.eos_id
-                if hit_eos or len(slot.generated) >= req.max_new_tokens:
-                    finished.append(FinishedRequest(
-                        id=req.id, prompt=req.prompt,
-                        tokens=slot.generated,
-                        finish_reason="eos" if hit_eos else "length",
-                        prompt_len=slot.prompt_len,
-                        admitted_tick=slot.admitted_tick,
-                        finished_tick=self.tick,
-                        prefix_hit_tokens=slot.prefix_hit,
-                        ttft_s=slot.first_token_time
-                        - self._submit_time.pop(req.id,
-                                                slot.first_token_time)))
-                    self.prompt_tokens += slot.prompt_len
-                    self.generated_tokens += len(slot.generated)
-                    if self.paged:
-                        # refcounted release: a block returns to the free
-                        # list only when no slot holds it and it backs no
-                        # prefix-cache entry; the next occupant's masked
-                        # view makes stale KV in recycled blocks
-                        # unreachable
-                        for blk in slot.blocks:
-                            self._unref(blk)
-                        self._committed -= slot.blocks_need
-                    self._active_ids.discard(req.id)
-                    self.slots[b] = None        # release: admit next tick
+        # 3) sample + device-seed rows that finished prefill this tick
+        pf_toks = None
+        if pf_items:
+            pf_toks = ex.seed_tokens(
+                pf_rows, pf_logits, jnp.stack(pf_keys),
+                jnp.asarray(np.asarray(pf_temps, np.float32)),
+                jnp.asarray(np.asarray(pf_topks, np.int32)))
 
-        self.busy_slot_ticks += (sum(s is not None for s in self.slots)
-                                 + len(finished))
+        # length finishes are host-predictable: a slot whose LAST sample
+        # was just scheduled releases now (blocks returned, row free for
+        # next tick's admission) so overlapped admission timing matches
+        # the sync loop exactly; the drain still owns emitting its
+        # events. Only EOS — unknowable until the value syncs — lags.
+        for b, s, _ in dec_items + pf_items:
+            if s.scheduled >= s.request.max_new_tokens and not s.released:
+                sched.release(b)
+
+        self._inflight.append(_InFlight(self.tick, dec_items, dec_toks,
+                                        pf_items, pf_toks))
+        self.busy_slot_ticks += len(occupied)
         self.total_slot_ticks += self.max_slots
         self.tick += 1
-        return finished
+        return True
+
+    def _drain_one(self, events: List[RequestOutput]):
+        """Sync the oldest in-flight tick's sampled tokens and turn them
+        into events: per-token deltas, EOS/length finishes (releasing the
+        slot), and discards for slots that finished/aborted after the
+        dispatch (the overlap loop's bounded overrun)."""
+        ent = self._inflight.popleft()
+        # the sync "gates" the pipeline when no younger tick is already
+        # dispatched — true on every sync-mode tick, false in the
+        # overlapped steady state (this is what sample_syncs_per_token
+        # measures; wall clock would hide it on fast hosts)
+        gating = not self._inflight
+        dec = np.asarray(ent.dec_toks) if ent.dec_toks is not None else None
+        pf = np.asarray(ent.pf_toks) if ent.pf_toks is not None else None
+        items = [(b, slot, idx, dec[b]) for b, slot, idx in ent.dec]
+        items += [(b, slot, idx, pf[i])
+                  for i, (b, slot, idx) in enumerate(ent.pf)]
+        now = time.monotonic()
+        emitted = 0
+        for b, slot, idx, val in sorted(items, key=lambda it: it[0]):
+            if slot.done:
+                # dispatched before the host saw this slot finish/abort
+                self.wasted_decodes += 1
+                continue
+            assert idx == len(slot.generated), "drain out of order"
+            assert slot.released or self.sched.slots[b] is slot, (
+                "slot recycled mid-flight")
+            t = int(val)
+            slot.generated.append(t)
+            emitted += 1
+            self.emitted_tokens += 1
+            if slot.first_token_time is None:
+                slot.first_token_time = now
+            req = slot.request
+            out = RequestOutput(
+                id=req.id, new_tokens=[t], tokens=list(slot.generated),
+                prompt_len=slot.prompt_len, tick=ent.tick, prompt=req.prompt,
+                admitted_tick=slot.admitted_tick,
+                prefix_hit_tokens=slot.prefix_hit)
+            hit_eos = req.eos_id is not None and t == req.eos_id
+            if hit_eos or len(slot.generated) >= req.max_new_tokens:
+                slot.done = True
+                out.finished = True
+                out.finish_reason = "eos" if hit_eos else "length"
+                out.ttft_s = slot.first_token_time - slot.submit_time
+                self.prompt_tokens += slot.prompt_len
+                self.generated_tokens += len(slot.generated)
+                if not slot.released:       # EOS before the predicted end
+                    self.sched.release(b)   # refcounted block return
+            events.append(out)
+        if gating:
+            self.sample_sync_tokens += emitted
+
+    def step(self) -> List[RequestOutput]:
+        """One engine step: dispatch the next tick's device work, then
+        drain sampled tokens — immediately in sync mode, one tick behind
+        with `overlap=True`. Returns every event now due: anything a
+        consumer left buffered (e.g. an abort's terminal event) plus
+        whatever drained this step (with overlap the drains describe the
+        PREVIOUS tick). Draining the buffer here keeps the documented
+        `while eng.has_work(): eng.step()` loop live-lock-free."""
+        events: List[RequestOutput] = list(self._out_buffer)
+        self._out_buffer.clear()
+        dispatched = self._dispatch_tick()
+        depth = 1 if (self.overlap and dispatched) else 0
+        while len(self._inflight) > depth:
+            self._drain_one(events)
+        return events
+
+    # -- output streams ------------------------------------------------------
 
     def events(self):
-        """Generator: run ticks until idle, yielding completions as they
-        happen (streaming consumption)."""
+        """Generator: run ticks until idle, yielding `RequestOutput`
+        events as they drain — one per sampled token plus a terminal
+        event per request (streaming consumption)."""
         while self.has_work():
             yield from self.step()
 
+    def stream(self, request: Request):
+        """Submit `request` and yield ITS `RequestOutput` events as they
+        arrive, ending after its terminal event. Events belonging to
+        other in-flight requests are re-buffered for `events()`
+        consumers (one partition pass per step, not per event), so
+        streams and the global event loop compose."""
+        rid = self.submit(request)
+        while self.has_work():
+            outs = self.step()
+            mine = [o for o in outs if o.id == rid]
+            self._out_buffer.extend(o for o in outs if o.id != rid)
+            for out in mine:
+                yield out
+                if out.finished:
+                    return
+            if not mine and not (self.sched.has_work() or self._inflight):
+                return      # terminal event consumed elsewhere (e.g. a
+                            # concurrent events() drain): nothing left to wait on
+
     def run(self, requests: Optional[List[Request]] = None
             ) -> List[FinishedRequest]:
-        """Submit `requests` (if given), drive to completion, return
-        finished requests sorted by id."""
+        """Deprecated completion-only view: submit `requests` (if given),
+        drive to completion, return `FinishedRequest`s sorted by id."""
         for r in requests or ():
             self.submit(r)
-        done = list(self.events())
+        done = [out.to_finished() for out in self.events() if out.finished]
         return sorted(done, key=lambda f: f.id)
 
+    # -- introspection -------------------------------------------------------
+
     def check_invariants(self):
-        """Allocator/accounting consistency — every physical block is in
-        exactly one of: free list, held by >=1 slot, cached-but-unheld.
-        Raises AssertionError on drift (tests call this after every
-        tick)."""
-        assert self._committed == sum(
-            s.blocks_need for s in self.slots if s is not None), (
-            "committed_blocks drifted from in-flight reservations: "
-            f"{self._committed} vs slot sum")
-        if not self.paged:
-            return
-        held = int(np.sum(self._ref > 0))
-        scanned = (sum(1 for blk in self._prefix.blocks()
-                       if self._ref[blk] == 0)
-                   if self._prefix is not None else 0)
-        assert scanned == self._cached_unheld, (
-            f"cached-unheld counter drift: counter={self._cached_unheld} "
-            f"vs scan={scanned}")
-        free = len(self._free)
-        assert free + held + self._cached_unheld == self.num_blocks, (
-            f"block ledger drift: free={free} held={held} "
-            f"cached={self._cached_unheld} != pool {self.num_blocks}")
-        # cross-checks: refcounts match slot holdings; free blocks are
-        # unreferenced and uncached
-        holds = np.zeros((self.num_blocks,), np.int32)
-        for s in self.slots:
-            if s is not None:
-                for blk in s.blocks:
-                    holds[blk] += 1
-        assert np.array_equal(holds, self._ref), "refcount drift"
-        for blk in self._free:
-            assert self._ref[blk] == 0, f"free block {blk} still referenced"
-            assert self._prefix is None or not self._prefix.holds(blk), (
-                f"free block {blk} still backs a prefix-cache entry")
+        """Allocator/accounting consistency (see Scheduler
+        .check_invariants) — valid after every tick, including overlapped
+        ticks with sample drains still in flight."""
+        self.sched.check_invariants()
 
     def stats(self) -> dict:
         util = self.busy_slot_ticks / max(self.total_slot_ticks, 1)
@@ -676,19 +452,26 @@ class ServingEngine:
               "prompt_tokens": self.prompt_tokens,
               "generated_tokens": self.generated_tokens,
               "prefill_tokens_computed": self.prefill_tokens_computed,
-              "prefix_tokens_reused": self.prefix_tokens_reused,
               "slot_utilization": util,
-              "committed_blocks": self._committed,
-              "h2d_updates": self.h2d_updates}
-        if self.paged:
-            held = int(np.sum(self._ref > 0))
-            st["kv_blocks"] = self.num_blocks
-            st["kv_block_size"] = self.kv_block_size
-            st["peak_blocks_used"] = self.peak_blocks_used
-            st["free_blocks"] = len(self._free)
-            st["held_blocks"] = held
-            st["cached_blocks"] = self._cached_unheld
-            st["cow_copies"] = self.cow_copies
-        if self._prefix is not None:
-            st["prefix_cache"] = self._prefix.stats()
+              "h2d_updates": self.ex.h2d_updates,
+              "overlap": self.overlap,
+              "sample_syncs_per_token": (self.sample_sync_tokens
+                                         / max(self.emitted_tokens, 1)),
+              "wasted_decodes": self.wasted_decodes,
+              "aborted_requests": self.aborted_requests}
+        st.update(self.sched.stats())
+        if self.ex.paged:
+            st["cow_copies"] = self.ex.cow_copies
         return st
+
+
+_ZERO_KEY = None
+
+
+def _zero_key():
+    """Placeholder PRNG key for non-decoding rows (lazily built so module
+    import stays device-free)."""
+    global _ZERO_KEY
+    if _ZERO_KEY is None:
+        _ZERO_KEY = jax.random.PRNGKey(0)
+    return _ZERO_KEY

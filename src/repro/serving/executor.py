@@ -1,0 +1,217 @@
+"""ModelExecutor: the device-owning half of the serving engine.
+
+Owns the jit-compiled prefill/decode steps, the slot-pool cache, the
+coalesced host mirrors of the device control arrays (`lengths`,
+`block_tables`, SSM reset rows), and — the piece that makes the
+overlapped loop possible — a **device-resident sampled-token feedback
+buffer**: decode and sampling are fused into one jitted step that writes
+each slot's sampled token straight back into the `[max_slots]` buffer
+the next decode tick reads its inputs from. The host therefore never
+has to sync a sampled token to build the next dispatch; it drains token
+values one tick behind, purely to emit events and detect EOS.
+
+Invalid rows (`n_valid == 0`) are fed token 0 / a zero embed inside the
+fused step — bit-identical to the host-built decode blocks the
+pre-split engine uploaded every tick, which matters for MoE capacity
+routing (cross-row cumsum) and keeps batch-composition independence
+intact.
+
+The compiled step triple is cached across executor instances keyed on
+everything that shapes the computation, so spinning up a new engine
+against the same (cfg, policy, pool geometry) costs no recompile.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch import steps as S
+from ..models import model as M
+
+#: compiled (prefill, decode+sample, seed) step triples shared across
+#: executor instances
+_STEP_CACHE: dict = {}
+
+
+def _sample_core(vocab: int, logits, keys, temps, topks):
+    """logits [R, V*] -> tokens [R]: per-row greedy / temperature / top-k.
+    Pure row-wise math (argmax / sort / per-key categorical), so a row's
+    token is independent of what other rows share the call — the property
+    that lets prefill-seeded rows and decode rows sample in separate
+    dispatches while staying bit-identical to a single batched sample."""
+    lg = logits[:, :vocab].astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1)
+    srt = jnp.sort(lg, axis=-1)[:, ::-1]
+    kidx = jnp.clip(topks - 1, 0, vocab - 1)
+    thresh = jnp.take_along_axis(srt, kidx[:, None], axis=1)
+    filt = jnp.where((topks[:, None] > 0) & (lg < thresh), -jnp.inf, lg)
+    scaled = filt / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk,
+                    kv_block_size=None, kv_blocks=None):
+    key = (cfg, policy, mesh, max_slots, alloc, chunk, kv_block_size,
+           kv_blocks)
+    if key not in _STEP_CACHE:
+        prefill_fn, *_ = S.build_prefill_step(
+            cfg, mesh, policy, with_cache=True, batch=max_slots,
+            max_len=alloc, chunk=chunk, kv_block_size=kv_block_size,
+            kv_blocks=kv_blocks)
+        decode_fn, *_ = S.build_serve_step(
+            cfg, mesh, policy, batch=max_slots, max_len=alloc, chunk=1,
+            kv_block_size=kv_block_size, kv_blocks=kv_blocks)
+        vocab, d_model = cfg.vocab, cfg.d_model
+        tokens_mode = cfg.input_mode == "tokens"
+
+        def decode_sample(params, cache, token_buf, n_valid, keys, temps,
+                          topks):
+            """Fused decode + sample + feedback: the [B] token buffer is
+            both this tick's decode input and (for valid rows) the
+            landing spot of this tick's sampled tokens."""
+            live = n_valid > 0
+            if tokens_mode:
+                tokens = jnp.where(live, token_buf, 0)[:, None]
+            else:
+                # embeds-mode stubs feed the one-hot of the sampled token
+                oh = jax.nn.one_hot(token_buf % d_model, d_model,
+                                    dtype=jnp.bfloat16)
+                tokens = (oh * live[:, None])[:, None, :]
+            logits, new_cache = decode_fn(params, cache, tokens, n_valid)
+            toks = _sample_core(vocab, logits, keys, temps, topks)
+            new_buf = jnp.where(live, toks, token_buf)
+            return toks, new_buf, new_cache
+
+        def seed(token_buf, rows, logits, keys, temps, topks):
+            """Sample rows that just finished prefill and scatter their
+            first tokens into the feedback buffer (device-side — the
+            host never round-trips the values)."""
+            toks = _sample_core(vocab, logits, keys, temps, topks)
+            return toks, token_buf.at[rows].set(toks)
+
+        _STEP_CACHE[key] = (
+            jax.jit(prefill_fn, donate_argnums=(1,)),
+            jax.jit(decode_sample, donate_argnums=(1, 2)),
+            jax.jit(seed, donate_argnums=(0,)))
+    return _STEP_CACHE[key]
+
+
+class ModelExecutor:
+    """Device-side execution engine behind the scheduler/engine split."""
+
+    def __init__(self, cfg, params, policy=None, mesh=None, max_slots=4,
+                 max_len=256, prefill_chunk=32,
+                 kv_block_size: Optional[int] = None,
+                 kv_blocks: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        # over-allocate by one chunk: a ragged write window [len, len+chunk)
+        # must stay in bounds for every row with len < max_len (see
+        # layers.ragged_cache_update)
+        alloc = max_len + prefill_chunk
+        self.cache = M.init_cache(cfg, max_slots, alloc, policy,
+                                  kv_block_size=kv_block_size,
+                                  kv_blocks=kv_blocks)
+        self.paged = "block_tables" in self.cache
+        self.has_ssm = "ssm" in self.cache
+        self.num_blocks = (int(self.cache["kv"]["k"].shape[1])
+                           if self.paged else 0)
+        self._prefill, self._decode_sample, self._seed = _compiled_steps(
+            cfg, policy, mesh, max_slots, alloc, prefill_chunk,
+            kv_block_size if self.paged else None,
+            self.num_blocks if self.paged else None)
+        # device-resident per-slot last-sampled-token feedback buffer
+        self._token_buf = jnp.zeros((max_slots,), jnp.int32)
+        # host mirrors of the device-side control arrays: admission and
+        # block allocation write here, `flush` applies each tick's
+        # mutations as ONE device update per array (never one dispatch
+        # per admitted slot or per allocated block)
+        self._lengths_host = np.zeros((max_slots,), np.int32)
+        self._lengths_dirty = False
+        if self.paged:
+            mb = self.cache["block_tables"].shape[1]
+            self._tables_host = np.zeros((max_slots, mb), np.int32)
+            self._tables_dirty = False
+        self._ssm_reset_rows: List[int] = []
+        self.h2d_updates = 0         # control-array device writes (flushes)
+        self.cow_copies = 0
+
+    # -- mirror-write protocol (the scheduler's view of the device) ---------
+
+    def set_length(self, row: int, value: int):
+        self._lengths_host[row] = value
+        self._lengths_dirty = True
+
+    def write_table(self, row: int, idx: int, blk: int):
+        self._tables_host[row, idx] = blk
+        self._tables_dirty = True
+
+    def reset_table_row(self, row: int):
+        self._tables_host[row, :] = 0
+        self._tables_dirty = True
+
+    def reset_ssm_row(self, row: int):
+        self._ssm_reset_rows.append(row)
+
+    def fork_block(self, src: int, dst: int):
+        """Copy-on-write fork of one pool block (codes AND paged scales)."""
+        self.cache = M.copy_pool_blocks(
+            self.cache, np.asarray([src], np.int32),
+            np.asarray([dst], np.int32))
+        self.cow_copies += 1
+
+    def flush(self):
+        """Apply this tick's admission / allocation mutations to the device
+        control arrays — at most one update per array per tick, however
+        many slots were admitted or blocks claimed."""
+        if self._ssm_reset_rows:
+            rows = np.asarray(sorted(set(self._ssm_reset_rows)), np.int32)
+            self.cache["ssm"] = tuple(
+                a.at[:, rows].set(jnp.zeros((), a.dtype))
+                for a in self.cache["ssm"])
+            self._ssm_reset_rows.clear()
+            self.h2d_updates += 1
+        if self._lengths_dirty:
+            self.cache["lengths"] = jnp.asarray(self._lengths_host)
+            self._lengths_dirty = False
+            self.h2d_updates += 1
+        if self.paged and self._tables_dirty:
+            self.cache["block_tables"] = jnp.asarray(self._tables_host)
+            self._tables_dirty = False
+            self.h2d_updates += 1
+
+    # -- device dispatches (all return un-synced device arrays) -------------
+
+    def prefill(self, row: int, tokens, take: int):
+        """One [1, chunk] chunked-prefill dispatch against slot `row`;
+        returns that row's last-valid logits [V*] (device)."""
+        lg, self.cache = self._prefill(
+            self.params, self.cache, tokens,
+            jnp.asarray([take], jnp.int32), jnp.int32(row))
+        self._lengths_host[row] += take      # mirror the step's +take
+        return lg[0]
+
+    def decode_and_sample(self, n_valid: np.ndarray, keys, temps, topks):
+        """One fused pool-decode + sample dispatch. `n_valid` [B] host
+        array marks frontier rows; returns the sampled tokens [B]
+        (device, unsynced) — valid rows' entries are real samples, the
+        rest is garbage the caller ignores."""
+        toks, self._token_buf, self.cache = self._decode_sample(
+            self.params, self.cache, self._token_buf,
+            jnp.asarray(n_valid), keys, temps, topks)
+        self._lengths_host[n_valid > 0] += 1  # mirror the step's +1
+        return toks
+
+    def seed_tokens(self, rows: List[int], logits_rows, keys, temps, topks):
+        """Sample first tokens for rows that finished prefill this tick
+        and scatter them into the feedback buffer; returns tokens [R]
+        (device, unsynced)."""
+        toks, self._token_buf = self._seed(
+            self._token_buf, jnp.asarray(np.asarray(rows, np.int32)),
+            jnp.stack(logits_rows), keys, temps, topks)
+        return toks

@@ -43,16 +43,19 @@ def _req(i, plen, cfg, gen=4, shared=0, **kw):
 
 
 def _drain_checked(eng, reqs):
-    """Drive to completion, validating the allocator ledger after every
-    tick (free + held + cached-but-unheld == pool; refcounts == slot
-    holdings; committed == sum of reservations)."""
+    """Drive to completion via the RequestOutput event stream, validating
+    the allocator ledger after every tick — overlapped ticks (sample
+    drains still in flight) included (free + held + cached-but-unheld ==
+    pool; refcounts == slot holdings; committed == sum of reservations)."""
     for r in reqs:
         eng.submit(r)
-    done = []
+    done = {}
     while eng.has_work():
-        done.extend(eng.step())
+        for out in eng.step():
+            if out.finished:
+                done[out.id] = out.tokens
         eng.check_invariants()
-    return {f.id: f.tokens for f in done}
+    return done
 
 
 # ---------------------------------------------------------------------------
@@ -97,8 +100,9 @@ def test_match_insert_evict_roundtrip():
 def test_shared_prefix_decode_matches_cold(arch):
     """Greedy decode with prefix caching on a shared-system-prompt workload
     is bit-identical to the cold paged engine AND the contiguous engine
-    for every cache family (SSM/hybrid carry a recurrence, so the flag
-    degrades to a no-op there — decode must still be unperturbed)."""
+    for every cache family — under the sync AND the overlapped loop
+    (SSM/hybrid carry a recurrence, so the flag degrades to a no-op
+    there — decode must still be unperturbed)."""
     cfg = get_config(arch).reduced()
     p = _params(cfg)
     lens = [(0, 3), (1, 7), (2, 5), (3, 2)]
@@ -111,8 +115,9 @@ def test_shared_prefix_decode_matches_cold(arch):
 
     cont, _ = run()
     cold, _ = run(kv_block_size=4)
+    ovl, _ = run(kv_block_size=4, prefix_cache=True, overlap=True)
     warm, eng = run(kv_block_size=4, prefix_cache=True)
-    assert cont == cold == warm
+    assert cont == cold == warm == ovl
     if cfg.family in ("dense", "moe", "vlm", "audio"):
         assert eng.stats()["prefix_tokens_reused"] > 0
         assert (eng.stats()["prefill_tokens_computed"]
@@ -136,7 +141,8 @@ def test_shared_prefix_quantized_kv_bit_exact():
 
     cold = run(kv_block_size=4)
     warm = run(kv_block_size=4, prefix_cache=True)
-    assert cold == warm
+    ovl = run(kv_block_size=4, prefix_cache=True, overlap=True)
+    assert cold == warm == ovl
 
 
 def test_prefill_skips_matched_blocks():

@@ -1,0 +1,217 @@
+"""Scheduler policy unit tests — pure host, driven against a mock
+executor that records the mirror-write protocol (no model, no device):
+admission order (FIFO vs shortest-prompt-first), no-skip reservation
+queueing over the paged pool, block claim/release refcounting, prefix
+matching with copy-on-write fork decisions, submit validation with
+leak-free bookkeeping, and queue-wait accounting."""
+import pytest
+
+from repro.serving import PrefixCache, Request
+from repro.serving.scheduler import (POLICIES, Scheduler, SchedulingPolicy,
+                                     ShortestPromptFirst, make_policy)
+
+
+class MockExecutor:
+    """Records the scheduler->executor mirror-write protocol."""
+
+    def __init__(self):
+        self.calls = []
+
+    def set_length(self, row, value):
+        self.calls.append(("set_length", row, value))
+
+    def write_table(self, row, idx, blk):
+        self.calls.append(("write_table", row, idx, blk))
+
+    def reset_table_row(self, row):
+        self.calls.append(("reset_table_row", row))
+
+    def reset_ssm_row(self, row):
+        self.calls.append(("reset_ssm_row", row))
+
+    def fork_block(self, src, dst):
+        self.calls.append(("fork_block", src, dst))
+
+    def of(self, kind):
+        return [c for c in self.calls if c[0] == kind]
+
+
+def _req(i, plen, gen=4):
+    return Request(prompt=list(range(plen)), max_new_tokens=gen, id=i)
+
+
+def _sched(**kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 32)
+    return Scheduler(**kw)
+
+
+# ---------------------------------------------------------------------------
+# policy order
+# ---------------------------------------------------------------------------
+
+def test_policy_registry_and_factory():
+    assert set(POLICIES) == {"fifo", "spf"}
+    assert isinstance(make_policy("spf"), ShortestPromptFirst)
+    custom = SchedulingPolicy()
+    assert make_policy(custom) is custom
+    with pytest.raises(ValueError):
+        make_policy("priority")
+
+
+def test_fifo_admits_in_submit_order():
+    s, ex = _sched(max_slots=1), MockExecutor()
+    for i, pl in [(0, 9), (1, 2), (2, 5)]:
+        s.submit(_req(i, pl), tick=0)
+    admitted = []
+    while s.pending or any(s.slots):
+        got = s.admit(tick=len(admitted), executor=ex)
+        admitted += [slot.request.id for _, slot in got]
+        for b, sl in enumerate(s.slots):
+            if sl is not None:
+                s.release(b)
+    assert admitted == [0, 1, 2]
+
+
+def test_spf_admits_shortest_prompt_first_ties_fifo():
+    s, ex = _sched(max_slots=1, policy="spf"), MockExecutor()
+    for i, pl in [(0, 9), (1, 5), (2, 2), (3, 5)]:
+        s.submit(_req(i, pl), tick=0)
+    admitted = []
+    while s.pending:
+        (b, slot), = s.admit(tick=0, executor=ex)
+        admitted.append(slot.request.id)
+        s.release(b)
+    assert admitted == [2, 1, 3, 0]      # shortest first; 1 before 3 (FIFO)
+
+
+def test_admission_applies_mirror_protocol():
+    s = _sched(max_slots=2, kv_block_size=4, num_blocks=8, paged=True,
+               has_ssm=True)
+    ex = MockExecutor()
+    s.submit(_req(0, 6), tick=0)
+    (b, slot), = s.admit(tick=0, executor=ex)
+    assert b == 0 and slot.request.id == 0
+    # paged admission resets the table row; lengths start cold at 0; the
+    # SSM carry is zeroed for the reused row
+    assert ex.of("reset_table_row") == [("reset_table_row", 0)]
+    assert ex.of("set_length") == [("set_length", 0, 0)]
+    assert ex.of("reset_ssm_row") == [("reset_ssm_row", 0)]
+    # no blocks claimed yet — claims happen as the frontier advances
+    assert ex.of("write_table") == []
+    s.ensure_blocks(0, 6, ex)            # cover positions [0, 6) -> 2 blocks
+    assert [c[:3] for c in ex.of("write_table")] == [
+        ("write_table", 0, 0), ("write_table", 0, 1)]
+    assert len(slot.blocks) == 2
+    s.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# reservation admission + release over the paged pool
+# ---------------------------------------------------------------------------
+
+def test_reservation_queues_no_skip():
+    # pool of 4 blocks; each request reserves ceil((6+6)/4) = 3 -> only
+    # one fits at a time, and FIFO order is preserved (no head-of-line
+    # skipping even though slot 1 is free)
+    s = _sched(max_slots=2, kv_block_size=4, num_blocks=4, paged=True)
+    ex = MockExecutor()
+    for i in range(3):
+        s.submit(_req(i, 6, gen=6), tick=0)
+    got = s.admit(tick=0, executor=ex)
+    assert [slot.request.id for _, slot in got] == [0]
+    assert s.stats()["pending_requests"] == 2
+    assert s.admit(tick=1, executor=ex) == []     # still committed
+    s.release(0)
+    got = s.admit(tick=2, executor=ex)
+    assert [slot.request.id for _, slot in got] == [1]
+    s.check_invariants()
+
+
+def test_release_returns_blocks_refcounted():
+    s = _sched(max_slots=1, kv_block_size=4, num_blocks=6, paged=True)
+    ex = MockExecutor()
+    s.submit(_req(0, 8, gen=4), tick=0)
+    s.admit(tick=0, executor=ex)
+    s.ensure_blocks(0, 8, ex)
+    st = s.stats()
+    assert st["held_blocks"] == 2 and st["free_blocks"] == 4
+    s.release(0)
+    st = s.stats()
+    assert st["held_blocks"] == 0 and st["free_blocks"] == 6
+    assert st["committed_blocks"] == 0
+    s.check_invariants()
+
+
+def test_prefix_match_claims_refs_and_forks_cow():
+    pc = PrefixCache(4)
+    s = _sched(max_slots=2, kv_block_size=4, num_blocks=8, paged=True,
+               prefix_cache=pc)
+    ex = MockExecutor()
+    # writer prefills blocks 0..1 of an 8-token prompt, registers them
+    s.submit(Request(prompt=list(range(8)) + [99], max_new_tokens=2, id=0),
+             tick=0)
+    s.admit(tick=0, executor=ex)
+    s.ensure_blocks(0, 9, ex)
+    s.slots[0].cache_len = 9
+    s.register_prefix_blocks(0)
+    assert len(pc) == 2
+    writer_blocks = list(s.slots[0].blocks)
+    # a follower with the same first 8 tokens matches both blocks and
+    # starts prefill at the boundary — no fork (prompt extends past it)
+    s.submit(Request(prompt=list(range(8)) + [42], max_new_tokens=2, id=1),
+             tick=1)
+    (b, slot), = s.admit(tick=1, executor=ex)
+    assert slot.prefix_hit == 8 and slot.prefill_pos == 8
+    assert slot.blocks == writer_blocks[:2]
+    assert ex.of("fork_block") == []
+    s.check_invariants()
+    # a FULL-prompt match must fork the last matched block copy-on-write
+    s.submit(Request(prompt=list(range(8)), max_new_tokens=2, id=2), tick=2)
+    s.release(1)
+    s.admit(tick=2, executor=ex)
+    (fork,) = ex.of("fork_block")
+    assert fork[1] == writer_blocks[1]            # src = last shared block
+    assert fork[2] not in writer_blocks           # dst freshly claimed
+    s.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# submit validation + leak-free bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_submit_rejects_without_leaking_state():
+    s = _sched(max_slots=1, max_len=10, kv_block_size=2, num_blocks=4,
+               paged=True)
+    with pytest.raises(ValueError):
+        s.submit(Request(prompt=[], max_new_tokens=4), tick=0)
+    with pytest.raises(ValueError):
+        s.submit(_req(7, 8, gen=8), tick=0)       # exceeds max_len
+    with pytest.raises(ValueError):
+        s.submit(_req(7, 4, gen=0), tick=0)       # zero-token generation
+    with pytest.raises(ValueError):               # exceeds the whole pool
+        s.submit(Request(prompt=[1, 2], max_new_tokens=8, id=7), tick=0)
+    # nothing leaked: no ids, no queue entries, no submit timestamps
+    assert not s.pending and not s._active_ids and not s._submitted
+    s.check_invariants()
+    sid = s.submit(_req(7, 4, gen=2), tick=0)
+    with pytest.raises(ValueError):               # duplicate live id
+        s.submit(_req(7, 4, gen=2), tick=0)
+    assert s.abort_pending(sid).id == 7
+    assert not s._active_ids and not s._submitted
+    assert s.abort_pending(sid) is None           # already gone
+    assert s.submit(_req(7, 4, gen=2), tick=1) == 7   # id reusable
+
+
+def test_queue_wait_stats():
+    s, ex = _sched(max_slots=1), MockExecutor()
+    s.submit(_req(0, 4), tick=0)
+    s.submit(_req(1, 4), tick=0)
+    s.admit(tick=0, executor=ex)                  # req 0 waits 0 ticks
+    s.release(0)
+    s.admit(tick=6, executor=ex)                  # req 1 waits 6 ticks
+    st = s.stats()
+    assert st["queue_wait_ticks_max"] == 6
+    assert st["queue_wait_ticks_mean"] == 3.0
+    assert st["pending_requests"] == 0
+    assert st["scheduler_policy"] == "fifo"
