@@ -31,6 +31,16 @@ Five measurements:
     fewer prefill tokens than the cold paged engine (matched blocks are
     shared copy-on-write, not recomputed) and improve mean TTFT, while
     decoding bit-identical tokens.
+  * the decode-attention HBM-traffic model — bytes the cache path moves
+    per decode tick, gather era vs fused paged-attention kernel. The
+    gather path materialised every slot's contiguous KV view in HBM
+    (codes + scales gathered, then a bf16 dequantized copy), all written
+    and read back before attention proper; the fused kernel streams pool
+    blocks HBM->VMEM exactly once with dequant + masking + softmax in the
+    same launch. The model is analytic (shapes x dtypes, fully
+    deterministic) and its before/after ratio is the gated
+    `paged_attn_gather_bytes_reduction` metric — the repo-level analogue
+    of the paper's DMA-read-elimination argument (62X/371X for VGG16).
   * a BENCH_serving.json artifact for CI's perf-regression gate
     (`benchmarks/check_regression.py`): machine-portable ratios (engine
     vs static speedup, paged-vs-contiguous overhead, capacity ratio,
@@ -176,6 +186,34 @@ def _overlap_experiment(cfg, params, policy):
     return dt_sync, dt_ovl, ovl_st
 
 
+def _decode_attn_traffic(cfg, policy):
+    """Analytic decode-attention HBM-traffic model, per decode tick.
+
+    Counts the cache-path bytes of one jitted decode step over the full
+    slot batch (per layer, k and v): the gather era read the pool, wrote
+    the gathered per-row views, read them back, and (for quantized
+    caches) wrote + read a bf16 dequantized copy; the fused kernel reads
+    each pool block once — the contiguous-view materialisation is gone.
+    Deterministic: shapes x dtypes only, no wall clock.
+
+    Returns (bytes_before, bytes_after) per decode tick."""
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    mb = -(-(MAX_LEN + PREFILL_CHUNK) // KV_BLOCK)
+    positions = SLOTS * mb * KV_BLOCK
+    quant = policy is not None and policy.kv_cache is not None
+    if quant:
+        # per (position, kv-head): int8 codes [hd] + f32 scale, each
+        # gathered (write + read back), plus the bf16 dequantized copy
+        before = 3 * (hd + 4) + 4 * hd
+        after = hd + 4                       # pool codes + scale, once
+    else:
+        before = 3 * 2 * hd                  # bf16 pool: read + view w/r
+        after = 2 * hd
+    n_kv_layers = cfg.n_layers               # bench arch: dense, all-KV
+    scale = positions * kvh * 2 * n_kv_layers       # k and v
+    return before * scale, after * scale
+
+
 def _capacity_at_budget(cfg, params, policy):
     """Peak concurrent requests under the contiguous layout's byte budget.
 
@@ -225,6 +263,8 @@ def run(rows, json_path=None):
 
     dt_sync, dt_ovl, ovl_st = _overlap_experiment(cfg, params, policy)
     peak, stc = _capacity_at_budget(cfg, params, policy)
+    attn_before, attn_after = _decode_attn_traffic(cfg, policy)
+    attn_reduction = attn_before / attn_after
     pfx_cold, pfx_warm = _prefix_experiment(cfg, params, policy)
     prefill_reduction = (pfx_cold["prefill_tokens_computed"]
                          / max(pfx_warm["prefill_tokens_computed"], 1))
@@ -259,6 +299,14 @@ def run(rows, json_path=None):
           f"{pfx_cold['ttft_mean'] * 1e3:.1f} -> "
           f"{pfx_warm['ttft_mean'] * 1e3:.1f} ms ({ttft_ratio:.2f}x), "
           f"{pfx_warm['cow_copies']} CoW forks")
+    print(f"decode-attn HBM traffic model: "
+          f"{attn_before / 1e6:.2f} MB/tick gathered-view era -> "
+          f"{attn_after / 1e6:.2f} MB/tick fused kernel "
+          f"({attn_reduction:.1f}x fewer cache-path bytes)")
+    rows.append(("serving_attn_traffic", attn_after,
+                 f"{attn_reduction:.1f}x cache-path byte reduction "
+                 f"({attn_before / 1e6:.2f}->{attn_after / 1e6:.2f} "
+                 f"MB/tick)"))
     rows.append(("serving_static_tok_s", dt_s / useful_s * 1e6,
                  f"{tps_s:.1f} tok/s"))
     rows.append(("serving_engine_tok_s", dt_e / useful_e * 1e6,
@@ -292,6 +340,14 @@ def run(rows, json_path=None):
             # invariant (deterministic), the TTFT ratio is wall clock
             "prefix_prefill_reduction": round(prefill_reduction, 4),
             "prefix_ttft_ratio": round(ttft_ratio, 4),
+            # decode-attention cache-path bytes, analytic model (fully
+            # deterministic): the fused kernel must keep the gathered
+            # contiguous view out of the decode hot loop
+            "paged_attn_gather_bytes_before_mb":
+                round(attn_before / 1e6, 3),
+            "paged_attn_gather_bytes_after_mb":
+                round(attn_after / 1e6, 3),
+            "paged_attn_gather_bytes_reduction": round(attn_reduction, 4),
             "slot_utilization": round(st["slot_utilization"], 4),
             # overlap loop: the per-token blocking-sync fraction is a
             # scheduling invariant gated ABSOLUTELY (< 1) by

@@ -11,7 +11,12 @@ slow cancels out of the ratio), `capacity_ratio` (paged concurrent
 slots per contiguous slot at byte parity) and
 `prefix_prefill_reduction` (cold / prefix-cached prefill tokens on the
 shared-system-prompt workload) — the latter two are scheduling
-invariants, fully deterministic. A gated metric more than `tolerance`
+invariants, fully deterministic — and
+`paged_attn_gather_bytes_reduction` (the analytic decode-attention
+HBM-traffic model: gathered-view-era cache bytes per tick over the
+fused paged-attention kernel's, also deterministic — it verifies the
+contiguous-view materialisation stays out of the decode hot loop).
+A gated metric more than `tolerance`
 below its baseline fails the job. `sample_syncs_per_token` is gated
 ABSOLUTELY (must stay < 1): the overlap-dispatch loop's whole point is
 that a sampled token's device→host sync must not gate the next
@@ -37,11 +42,13 @@ import json
 import sys
 
 GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio",
-         "prefix_prefill_reduction")
+         "prefix_prefill_reduction", "paged_attn_gather_bytes_reduction")
 # metric -> exclusive ceiling, independent of the baseline file
 ABSOLUTE_CEILINGS = {"sample_syncs_per_token": 1.0}
 INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
-                 "prefix_ttft_ratio", "overlap_speedup_vs_sync")
+                 "prefix_ttft_ratio", "overlap_speedup_vs_sync",
+                 "paged_attn_gather_bytes_before_mb",
+                 "paged_attn_gather_bytes_after_mb")
 
 
 def main(argv=None) -> int:

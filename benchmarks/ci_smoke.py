@@ -13,6 +13,13 @@ against it, not just plausible), paged block-pool cache
 (`--prefix-cache`, copy-on-write block sharing). It fails if any pair of
 runs disagrees on greedy tokens. Backend choice scales the workload down
 for the slower interpreted Pallas kernels.
+
+The paged runs exercise the fused paged-attention op on the decode hot
+loop (kernels/paged_attention via dispatch — reference impl under
+`--backend reference`, the block-table-walking Pallas kernel in
+interpret mode under `--backend pallas-interpret`), so both backends'
+token-equality checks cover the fused path against the contiguous
+engine automatically.
 """
 from __future__ import annotations
 

@@ -2,9 +2,10 @@
 
 A small registry maps (op, backend) -> implementation:
 
-    op       : 'matmul' | 'act' | 'softmax'
+    op       : 'matmul' | 'act' | 'softmax' | 'paged_attention'
     backend  : 'reference' (fake-quant XLA path, gradient-capable)
-               'pallas'    (real integer kernels: fxp_gemm + CORDIC AF/softmax)
+               'pallas'    (real integer kernels: fxp_gemm + CORDIC AF/softmax
+                            + the fused paged-attention block-table walk)
 
 'pallas-interpret' resolves to the 'pallas' implementations with
 interpret=True (kernel bodies run as traced jnp on CPU). `core.precision`
@@ -32,9 +33,12 @@ from .cordic_af.ops import cordic_af
 from .cordic_softmax.ops import cordic_softmax
 from .fxp_gemm.fxp_gemm import FUSED_AFS, fxp_gemm_fused_pallas
 from .fxp_gemm.ops import pad_to, round_up
+from .paged_attention.ops import paged_attention as _paged_attn_pallas
+from .paged_attention.ref import paged_attention_ref as _paged_attn_ref
 
 __all__ = ["register", "lookup", "matmul", "act", "softmax",
-           "expert_matmul", "supports_fused_af", "PALLAS_AFS"]
+           "paged_attention", "expert_matmul", "supports_fused_af",
+           "PALLAS_AFS"]
 
 #: AFs the pallas act/epilogue path implements (Sel_AF minus softmax, which
 #: is a row-reduction kernel of its own).
@@ -252,6 +256,48 @@ def _softmax_pallas(x, policy, axis=-1, interpret=False):
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+@register("paged_attention", "reference")
+def _paged_attention_reference(q, k_pool, v_pool, k_scale, v_scale,
+                               block_tables, policy, *, lengths, kv_valid,
+                               positions, fmt=None, int_attention=False,
+                               interpret=False):
+    """Gathered-view oracle (pure jnp). Note `policy.softmax` inside it
+    still routes per the policy's own backend, exactly as the historical
+    gather+masked layers path did — so this impl is bit-identical to that
+    path for every policy."""
+    del interpret
+    return _paged_attn_ref(q, k_pool, v_pool, k_scale, v_scale,
+                           block_tables, lengths=lengths, kv_valid=kv_valid,
+                           positions=positions, fmt=fmt,
+                           int_attention=int_attention, policy=policy)
+
+
+@register("paged_attention", "pallas")
+def _paged_attention_pallas(q, k_pool, v_pool, k_scale, v_scale,
+                            block_tables, policy, *, lengths, kv_valid,
+                            positions, fmt=None, int_attention=False,
+                            interpret=False):
+    """Fused block-table walk: pool codes move HBM->VMEM once, no gathered
+    contiguous view materialises. The integer path with a CORDIC softmax
+    falls back to the reference impl — there the softmax itself is the
+    cordic_softmax pallas kernel (can't nest pallas calls), and the
+    reference routes through it, keeping numerics identical."""
+    if int_attention and policy is not None and policy.attn_softmax == "cordic":
+        return _paged_attention_reference(
+            q, k_pool, v_pool, k_scale, v_scale, block_tables, policy,
+            lengths=lengths, kv_valid=kv_valid, positions=positions,
+            fmt=fmt, int_attention=int_attention)
+    return _paged_attn_pallas(q, k_pool, v_pool, k_scale, v_scale,
+                              block_tables, lengths=lengths,
+                              kv_valid=kv_valid, positions=positions,
+                              fmt=fmt, int_attention=int_attention,
+                              policy=policy, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # public entry points (called from core.precision)
 # ---------------------------------------------------------------------------
 
@@ -295,3 +341,17 @@ def act(x, af: str, policy, backend: str):
 def softmax(x, policy, backend: str, axis: int = -1):
     fn, interp = lookup("softmax", backend)
     return fn(x, policy, axis=axis, interpret=interp)
+
+
+def paged_attention(q, k_pool, v_pool, k_scale, v_scale, block_tables,
+                    policy, backend: str, *, lengths, kv_valid, positions,
+                    fmt=None, int_attention: bool = False):
+    """Fused paged decode attention straight off the block pool.
+
+    q: [B, 1, H, hd]; pools: [NB, bs, KV, hd] (+ [NB, bs, KV, 1] scales
+    when `fmt` is set); block_tables: [B, MB] int32 with sentinel NB for
+    unallocated slots. Returns [B, 1, H, hd] in q.dtype."""
+    fn, interp = lookup("paged_attention", backend)
+    return fn(q, k_pool, v_pool, k_scale, v_scale, block_tables, policy,
+              lengths=lengths, kv_valid=kv_valid, positions=positions,
+              fmt=fmt, int_attention=int_attention, interpret=interp)

@@ -18,10 +18,17 @@ output-stationary across K steps. Two kernel families:
     AF(acc * scale[1, N]), scale carrying the per-output-channel weight
     scale folded with the dynamic activation scale.
 
-Code dtypes: int8 codes (FxP4/8) accumulate exactly in int32; int16/int32
-codes (FxP16/32) accumulate in f32 — the software stand-in for the
-hardware's widened accumulator (documented compromise: f32 has a 24-bit
-mantissa, matching the reference backend's own accumulation).
+Code dtypes and the exact-int contract past 8 bits: int8 codes (FxP4/8)
+accumulate exactly in int32 for any K — worst case K * 127^2 stays far
+inside int32. Wider codes are exact in int32 only while the overflow-free
+bound K * qmax^2 < 2^31 holds: FxP12 (qmax 2047) is exact up to K = 512,
+FxP16 (qmax 32767) only to K = 2. `ops.fxp_gemm` checks the bound per
+call and passes `wide_exact` to the fused kernel; beyond the bound,
+>8-bit codes accumulate in f32 — the software stand-in for the hardware's
+widened accumulator (documented compromise: f32 has a 24-bit mantissa,
+matching the reference backend's own accumulation). The raw code kernel
+(`fxp_gemm_pallas`) always accumulates int32 and leaves the bound to the
+caller — it preserves int16/int32 code dtypes instead of truncating them.
 """
 from __future__ import annotations
 
@@ -103,10 +110,18 @@ def _gemm_kernel_fused(x_ref, w_ref, s_ref, o_ref, acc_ref, *, nk, packed,
 
 def fxp_gemm_pallas(x_codes: jax.Array, w_codes: jax.Array,
                     blocks=DEFAULT_BLOCKS, interpret: bool = False):
-    """int8[M,K] @ int8[K,N] -> int32[M,N], exact."""
+    """int[M,K] @ int[K,N] -> int32[M,N], exact int32 accumulation.
+
+    Codes keep their storage dtype (int8 for FxP<=8, int16 for FxP12/16)
+    on the way into the kernel — the dot widens to int32 in VMEM. Exact
+    for any K with int8 codes; for wider codes the caller owns the
+    overflow-free bound K * qmax^2 < 2^31 (see module docstring)."""
     m, k = x_codes.shape
     k2, n = w_codes.shape
     assert k == k2
+    assert (jnp.issubdtype(x_codes.dtype, jnp.integer)
+            and jnp.issubdtype(w_codes.dtype, jnp.integer)), (
+        x_codes.dtype, w_codes.dtype)
     bm, bn, bk = (min(b, d) for b, d in zip(blocks, (m, n, k)))
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
     return pl.pallas_call(
@@ -117,7 +132,7 @@ def fxp_gemm_pallas(x_codes: jax.Array, w_codes: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
-    )(x_codes.astype(jnp.int8), w_codes.astype(jnp.int8))
+    )(x_codes, w_codes)
 
 
 def fxp4_gemm_packed_pallas(x_codes: jax.Array, w_packed: jax.Array,
@@ -144,12 +159,18 @@ def fxp_gemm_fused_pallas(x_codes: jax.Array, w_codes: jax.Array,
                           scale: jax.Array, *, packed: bool = False,
                           af: str | None = None, hr_stages: int = 4,
                           lv_stages: int = 5, blocks=DEFAULT_BLOCKS,
+                          wide_exact: bool = False,
                           interpret: bool = False):
     """Code GEMM with fused dequant(+AF) epilogue — one kernel launch.
 
     x_codes: int[M,K]; w_codes: int[K,N] codes, or packed-nibble int8
     [K, N//2] when packed=True. scale: f32[1,N] (per-output-channel dequant
     scale, activation scale folded in). Returns f32[M,N] = AF(acc * scale).
+
+    `wide_exact` extends the exact-int contract to >8-bit codes: the
+    caller asserts K * qmax^2 < 2^31 (no int32 partial-sum overflow —
+    `ops.fxp_gemm` computes this from the format) and the kernel keeps
+    the int32 accumulator instead of falling back to f32.
     """
     assert af is None or af in FUSED_AFS, af
     m, k = x_codes.shape
@@ -160,13 +181,15 @@ def fxp_gemm_fused_pallas(x_codes: jax.Array, w_codes: jax.Array,
     bm, bn, bk = (min(b, d) for b, d in zip(blocks, (m, n, k)))
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
     assert not packed or bn % 2 == 0
-    # exact int32 accumulation only when BOTH operands are <=8-bit codes
-    # (packed nibbles count: the bytes hold 4-bit lanes) — wider codes
-    # would overflow int32 partial sums, so they take the f32 accumulator
+    # exact int32 accumulation when BOTH operands are <=8-bit codes
+    # (packed nibbles count: the bytes hold 4-bit lanes) — any K fits.
+    # Wider codes accumulate int32 only under the caller-asserted
+    # `wide_exact` bound; otherwise they take the f32 accumulator.
     def _narrow(dt, is_packed=False):
         return jnp.issubdtype(dt, jnp.integer) and (dt.itemsize == 1
                                                     or is_packed)
-    exact = _narrow(x_codes.dtype) and _narrow(w_codes.dtype, packed)
+    exact = (_narrow(x_codes.dtype) and _narrow(w_codes.dtype, packed)
+             ) or wide_exact
     acc_dtype = jnp.int32 if exact else jnp.float32
     nk = k // bk
     kern = functools.partial(_gemm_kernel_fused, nk=nk, packed=packed,

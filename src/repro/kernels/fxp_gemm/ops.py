@@ -41,8 +41,12 @@ def pad_to(x, mult, axis, value=0):
 def fxp_gemm(x: jax.Array, w: jax.Array, precision: str = "fxp8",
              af: str | None = None, packed: bool = False,
              interpret: bool | None = None) -> jax.Array:
-    """Quantized x @ w with FxP<precision> codes and int32 accumulation
-    (f32 accumulation for >8-bit codes, matching the reference backend).
+    """Quantized x @ w with FxP<precision> codes and int32 accumulation.
+
+    >8-bit codes stay on the exact int32 accumulator while the
+    overflow-free bound K * qmax^2 < 2^31 holds (FxP12: K <= 512; FxP16:
+    K <= 2) — the wider-accumulator MAC contract; past the bound they fall
+    back to f32 accumulation, matching the reference backend.
 
     x: f[M,K], w: f[K,N]. Returns f32[M,N] (optionally through the fused
     Flex-PE AF epilogue).
@@ -53,6 +57,8 @@ def fxp_gemm(x: jax.Array, w: jax.Array, precision: str = "fxp8",
     assert fmt.bits == 4 or not packed, "packed path is FxP4-only"
     m, k = x.shape
     _, n = w.shape
+    # padded K only appends zero codes: the live worst case is k products
+    wide_exact = fmt.bits > 8 and k * fmt.qmax ** 2 < 2 ** 31
 
     xc, sx = quantize(x, fmt)
     wc, sw = quantize(w, fmt)
@@ -71,7 +77,8 @@ def fxp_gemm(x: jax.Array, w: jax.Array, precision: str = "fxp8",
     hr, lv, _ = PARETO_STAGES[fmt.bits]
     out = fxp_gemm_fused_pallas(xcp, wcp, scale, packed=packed, af=af,
                                 hr_stages=hr, lv_stages=lv,
-                                blocks=(bm, 128, 128), interpret=interpret)
+                                blocks=(bm, 128, 128),
+                                wide_exact=wide_exact, interpret=interpret)
     out = out[:m, :n]
     if af is not None:
         # write-back quantization of the AF result — same contract as the

@@ -1,0 +1,2 @@
+from .ops import paged_attention  # noqa: F401
+from .ref import paged_attention_ref  # noqa: F401

@@ -1,0 +1,68 @@
+"""High-level entry for the fused paged decode-attention kernel.
+
+Translates the policy-level call (float/quantized pools, optional
+fully-integer attention, exact vs CORDIC softmax) into the pallas_call
+plumbing: packs the per-slot scalar metadata, pre-quantizes q for the
+integer path exactly as the reference does, and builds the exp/normalise
+closures from the policy so the kernel epilogue computes the same
+pluggable online-softmax pair as `models.layers.chunked_attention`.
+
+`paged_attention` here is the PALLAS implementation; the dispatch
+registry pairs it with `ref.paged_attention_ref` (the oracle) under op
+name 'paged_attention'.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.fxp import quantize
+from .paged_attention import (paged_attention_float_pallas,
+                              paged_attention_int_pallas)
+from .ref import _exp_fn, _final_div
+
+
+def paged_attention(q, k_pool, v_pool, k_scale, v_scale, block_tables, *,
+                    lengths, kv_valid, positions, fmt=None,
+                    int_attention: bool = False,
+                    policy: Optional[object] = None,
+                    interpret: bool = False):
+    """Fused paged decode attention (see ref.paged_attention_ref for the
+    argument contract). q: [B, 1, H, hd] -> [B, 1, H, hd] in q.dtype."""
+    b, s1, h, hd = q.shape
+    assert s1 == 1, "fused paged attention is decode-only (Sq = 1)"
+    kvh = k_pool.shape[2]
+    g = h // kvh
+    skv = block_tables.shape[1] * k_pool.shape[1]       # MB * bs
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    kvv = jnp.broadcast_to(jnp.asarray(kv_valid, jnp.int32), (b,))
+    tables = block_tables.astype(jnp.int32)
+
+    if fmt is not None and int_attention:
+        # integer path: q quantized outside the kernel (identical op to the
+        # reference), per-row causal bound is the absolute query position
+        meta = jnp.stack([lens, kvv, positions[:, 0].astype(jnp.int32)],
+                         axis=1)
+        qc, sq = quantize(q.astype(jnp.float32) / math.sqrt(hd), fmt, axis=3)
+        softmax_fn = ((lambda z: policy.softmax(z, axis=-1)) if policy
+                      else (lambda z: jax.nn.softmax(z, axis=-1)))
+        out = paged_attention_int_pallas(
+            qc[:, 0].reshape(b, kvh, g, hd), sq[:, 0].reshape(b, kvh, g, 1),
+            k_pool, v_pool, k_scale, v_scale, tables, meta, fmt=fmt,
+            softmax_fn=softmax_fn, out_dtype=q.dtype, interpret=interpret)
+        return out.reshape(b, 1, h, hd)
+
+    # float path (native pools, or int8 pools dequantized at staging);
+    # the causal bound is the row's cache length, as in chunked_attention
+    meta = jnp.stack([lens, kvv, lens], axis=1)
+    out = paged_attention_float_pallas(
+        q[:, 0].reshape(b, kvh, g, hd), k_pool, v_pool, tables, meta,
+        k_scale=k_scale if fmt is not None else None,
+        v_scale=v_scale if fmt is not None else None,
+        exp_fn=_exp_fn(policy),
+        div_fn=lambda num, den: _final_div(num, den, skv, policy),
+        out_dtype=q.dtype, interpret=interpret)
+    return out.reshape(b, 1, h, hd)

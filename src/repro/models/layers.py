@@ -29,8 +29,15 @@ import jax.numpy as jnp
 
 from ..core import cordic
 from ..core.activation import default_stages, softmax_lv_stages
+from ..core.backend import resolve as _resolve_backend
 from ..core.fxp import FORMATS, dequantize, quantize
 from ..core.precision import PrecisionPolicy, qmatmul
+
+
+def _dispatch():
+    # lazy: layers must stay importable without pulling kernel modules in
+    from ..kernels import dispatch
+    return dispatch
 
 # ---------------------------------------------------------------------------
 # initialisation helpers
@@ -284,10 +291,14 @@ def gather_block_kv(pool, block_tables):
 
     pool: [NB, bs, ...]; block_tables: [B, MB] -> [B, MB*bs, ...] where
     logical position p of row b sits at view index p (table slot p // bs,
-    offset p % bs). Unallocated table entries gather block 0's (finite)
-    data — every such position is >= the row's valid length and masked by
-    the attention kernels, contributing exact zeros."""
-    g = jnp.take(pool, block_tables, axis=0, mode="clip")
+    offset p % bs). Unallocated table entries carry the sentinel index NB
+    (one past the pool — see `model.init_cache`) and gather exact zeros
+    (`mode="fill"`): the "masked anyway" invariant is enforced by
+    construction instead of leaking block 0's live data into positions the
+    attention kernels must mask. Every such position is >= the row's valid
+    length, so for any row with at least one valid key the output is
+    bit-identical to the historical clip-mode gather."""
+    g = jnp.take(pool, block_tables, axis=0, mode="fill", fill_value=0)
     b, mb, bs = g.shape[0], g.shape[1], g.shape[2]
     return g.reshape((b, mb * bs) + g.shape[3:])
 
@@ -329,11 +340,14 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
     prefill and S = 1 plain decode through the same code.
 
     Paged decode: `block_tables` [B, MB] switches the cache leaves to a
-    global block pool [NB, bs, KV, hd] shared by all rows. New tokens
-    scatter into the current block only (`paged_cache_update`); attention
-    runs over the gathered per-row view (`gather_block_kv`), whose stale /
-    unallocated tail is masked exactly like the contiguous cache's — the
-    two layouts are bit-identical in what they compute. Several rows may
+    global block pool [NB, bs, KV, hd] shared by all rows (unallocated
+    table slots hold the sentinel NB). New tokens scatter into the current
+    block only (`paged_cache_update`); single-token decode (S = 1) then
+    runs the fused `kernels/paged_attention` op, which walks the table
+    over the pool directly, while chunked prefill (S > 1) attends over the
+    gathered per-row view (`gather_block_kv`) — stale / unallocated tails
+    are masked exactly like the contiguous cache's, so all layouts and
+    paths are bit-identical in what they compute. Several rows may
     point at the SAME physical block (prefix sharing): that is safe
     because a row only ever writes at [lengths, lengths+n_valid), and the
     engine copy-on-writes any shared block before a row's write window
@@ -385,28 +399,42 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
             vc = write(vc, v_codes)
             k_scale = write(k_scale, ks_new)
             v_scale = write(v_scale, vs_new)
-            if getattr(policy, "int_attention", False):
-                # fully-integer FxP attention (§Perf): score/AV dots run on
-                # int8 codes directly — no bf16 dequantized cache copy is
-                # ever materialised; scales fold into q and the softmax
-                # weights (the Flex-PE SIMD MAC applied to attention).
-                out = int8_decode_attention(
-                    q, view(kc), view(vc), view(k_scale), view(v_scale),
-                    kq_fmt, policy, positions=positions,
-                    kv_valid_len=kv_valid)
-                new_cache = (kc, vc, k_scale, v_scale)
-                out = out.reshape(b, s, h * hd)
-                return qmatmul(out, p["wo"], policy), new_cache
-            k_full = dequantize(view(kc), view(k_scale), jnp.bfloat16)
-            v_full = dequantize(view(vc), view(v_scale), jnp.bfloat16)
         else:
             kc = write(kc, k)
             vc = write(vc, v)
-            k_full, v_full = view(kc), view(vc)
-        out = chunked_attention(q, k_full, v_full, causal=True,
-                                q_offset=lengths, policy=policy,
-                                kv_valid_len=kv_valid)
         new_cache = (kc, vc, k_scale, v_scale)
+        int_attn = bool(kq_fmt is not None
+                        and getattr(policy, "int_attention", False))
+        if paged and s == 1:
+            # fused paged decode: the kernel walks the block table over the
+            # pool in HBM directly (dequant + masking + online softmax in
+            # one launch) — no gathered contiguous view is materialised.
+            # Bit-exact vs the gather path below on every backend; chunked
+            # prefill (s > 1) keeps the gather path, the HBM win targets
+            # the per-token decode hot loop.
+            be = _resolve_backend(policy.backend if policy else None)
+            out = _dispatch().paged_attention(
+                q, kc, vc, k_scale, v_scale, block_tables, policy, be,
+                lengths=lengths, kv_valid=kv_valid, positions=positions,
+                fmt=kq_fmt, int_attention=int_attn)
+        elif int_attn:
+            # fully-integer FxP attention (§Perf): score/AV dots run on
+            # int8 codes directly — no bf16 dequantized cache copy is
+            # ever materialised; scales fold into q and the softmax
+            # weights (the Flex-PE SIMD MAC applied to attention).
+            out = int8_decode_attention(
+                q, view(kc), view(vc), view(k_scale), view(v_scale),
+                kq_fmt, policy, positions=positions,
+                kv_valid_len=kv_valid)
+        else:
+            if kq_fmt is not None:
+                k_full = dequantize(view(kc), view(k_scale), jnp.bfloat16)
+                v_full = dequantize(view(vc), view(v_scale), jnp.bfloat16)
+            else:
+                k_full, v_full = view(kc), view(vc)
+            out = chunked_attention(q, k_full, v_full, causal=True,
+                                    q_offset=lengths, policy=policy,
+                                    kv_valid_len=kv_valid)
 
     out = out.reshape(b, s, h * hd)
     return qmatmul(out, p["wo"], policy), new_cache

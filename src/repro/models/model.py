@@ -301,10 +301,13 @@ def init_cache(cfg, batch, max_len, policy=None, dtype=jnp.bfloat16,
     `kv_block_size` switches attention families to the paged layout: KV
     leaves become a global block pool [L, kv_blocks, block_size, KV, hd]
     addressed through `cache["block_tables"]` [batch, MB] (MB = blocks
-    needed to cover max_len). Unallocated table entries are 0 — safe,
-    because every position they could resolve is masked by the row's
-    length. SSM state is a dense per-slot recurrent carry either way
-    (there is no sequence axis to page)."""
+    needed to cover max_len). Unallocated table entries hold the sentinel
+    NB (one past the pool): gathers fill them with exact zeros and the
+    fused paged-attention kernel zeroes their staged blocks, so the
+    "every such position is masked" invariant holds by construction
+    rather than by reading some live block's data. SSM state is a dense
+    per-slot recurrent carry either way (there is no sequence axis to
+    page)."""
     cache = {}
     if kv_blocks is not None and kv_block_size is None:
         raise ValueError("kv_blocks requires kv_block_size (a pool size "
@@ -331,7 +334,8 @@ def init_cache(cfg, batch, max_len, policy=None, dtype=jnp.bfloat16,
                                     num_blocks=kv_blocks)
     if paged:
         mb = -(-max_len // kv_block_size)
-        cache["block_tables"] = jnp.zeros((batch, mb), jnp.int32)
+        nb = int(cache["kv"]["k"].shape[1])
+        cache["block_tables"] = jnp.full((batch, mb), nb, jnp.int32)
     cache["lengths"] = jnp.zeros((batch,), jnp.int32)
     return cache
 

@@ -135,7 +135,10 @@ class ModelExecutor:
         self._lengths_dirty = False
         if self.paged:
             mb = self.cache["block_tables"].shape[1]
-            self._tables_host = np.zeros((max_slots, mb), np.int32)
+            # sentinel num_blocks = unallocated (gathers read zeros, the
+            # fused kernel zeroes the staged block) — see model.init_cache
+            self._tables_host = np.full((max_slots, mb), self.num_blocks,
+                                        np.int32)
             self._tables_dirty = False
         self._ssm_reset_rows: List[int] = []
         self.h2d_updates = 0         # control-array device writes (flushes)
@@ -152,7 +155,7 @@ class ModelExecutor:
         self._tables_dirty = True
 
     def reset_table_row(self, row: int):
-        self._tables_host[row, :] = 0
+        self._tables_host[row, :] = self.num_blocks
         self._tables_dirty = True
 
     def reset_ssm_row(self, row: int):

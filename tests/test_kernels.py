@@ -88,6 +88,57 @@ def test_fxp_gemm_integer_exactness(rng):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
+def test_fxp_gemm_int16_codes_exact(rng):
+    """>8-bit codes (FxP12, int16 storage) keep the exact-int contract:
+    the code kernel must not truncate int16 codes, and inside the
+    overflow-free bound K * qmax^2 < 2^31 (K=256 * 2047^2 ~ 2^30) the
+    int32 accumulation is bit-exact vs the oracle."""
+    xc = rng.integers(-2047, 2048, (128, 256)).astype(np.int16)
+    wc = rng.integers(-2047, 2048, (256, 128)).astype(np.int16)
+    got = fxp_gemm_pallas(jnp.asarray(xc), jnp.asarray(wc), interpret=True)
+    ref = fxp_gemm_codes_ref(jnp.asarray(xc), jnp.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_fxp12_end_to_end_exact_vs_ref(rng):
+    """fxp_gemm('fxp12') end-to-end == float oracle bit-for-bit while the
+    wide-accumulator bound holds (the >8-bit test the ROADMAP flagged)."""
+    a = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    got = fxp_gemm(a, b, "fxp12")
+    ref, *_ = fxp_gemm_ref(a, b, "fxp12")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_fxp16_beyond_bound_falls_back_to_f32(rng):
+    """FxP16's bound (K <= 2) never holds for real shapes: the fused
+    kernel must take the f32 accumulator and stay close to a float64
+    code-dot oracle (the int32 oracle itself wraps here — K * qmax^2
+    ~ 1.4e11 >> 2^31 — which is exactly why the bound exists)."""
+    from repro.core.fxp import FORMATS, quantize
+    a = jnp.asarray(rng.normal(size=(32, 128)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(128, 32)).astype(np.float32))
+    got = np.asarray(fxp_gemm(a, b, "fxp16"))
+    fmt = FORMATS["fxp16"]
+    xc, sx = quantize(a, fmt)
+    wc, sw = quantize(b, fmt)
+    oracle = (np.asarray(xc, np.float64) @ np.asarray(wc, np.float64)
+              * float(sx * sw))
+    np.testing.assert_allclose(got, oracle.astype(np.float32),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fxp12_error_below_fxp8(rng):
+    a = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    exact = np.asarray(a @ b)
+    err = {}
+    for p in ("fxp8", "fxp12"):
+        got = np.asarray(fxp_gemm(a, b, p))
+        err[p] = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+    assert err["fxp12"] < err["fxp8"]
+
+
 def test_fxp4_packed_matches_unpacked(rng):
     a = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
     b = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))

@@ -1,0 +1,194 @@
+"""Fused paged decode attention (kernels/paged_attention): bit-exactness
+of the block-table-walking op vs the historical gather+masked-attention
+composition on both backends, across {fp, int8-KV dequant, fully-integer}
+x {exact, CORDIC softmax} x ragged lengths (0-length idle rows, shared
+block tables), plus engine-level token equality for every cache family
+with the fused path active on the decode hot loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PrecisionPolicy
+from repro.core.fxp import FORMATS, dequantize, quantize
+from repro.kernels import dispatch
+from repro.models import layers as L
+from repro.models import model as M
+from repro.serving import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+BACKENDS = ("reference", "pallas-interpret")
+FAMILIES = ("qwen2_5_14b", "mamba2_370m", "zamba2_1p2b", "deepseek_moe_16b")
+
+
+# ---------------------------------------------------------------------------
+# op level: fused kernel vs the gather+masked composition
+# ---------------------------------------------------------------------------
+
+def _pools(quant, seed=0):
+    """Random pools + ragged tables: row 1 spans the whole table, rows 0
+    and 2 SHARE their blocks (prefix sharing), row 3 is idle (all
+    sentinel); tail slots of active rows are unallocated."""
+    rng = np.random.default_rng(seed)
+    b, kvh, g, hd = 4, 2, 3, 8
+    nb, bs, mb = 9, 4, 4
+    q = jnp.asarray(rng.normal(size=(b, 1, kvh * g, hd)).astype(np.float32))
+    kf = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)).astype(np.float32))
+    vf = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)).astype(np.float32))
+    tables = np.full((b, mb), nb, np.int32)
+    tables[0, :2] = [3, 1]
+    tables[1, :4] = [0, 2, 5, 7]
+    tables[2, :2] = [3, 1]
+    tables = jnp.asarray(tables)
+    lengths = jnp.asarray([6, 14, 6, 0], jnp.int32)   # query positions
+    n_valid = jnp.asarray([1, 1, 1, 0], jnp.int32)    # row 3: idle
+    kv_valid = lengths + n_valid
+    positions = lengths[:, None]
+    if quant:
+        fmt = FORMATS["fxp8"]
+        kc, ks = quantize(kf, fmt, axis=3)
+        vc, vs = quantize(vf, fmt, axis=3)
+        return q, kc, vc, ks, vs, tables, lengths, kv_valid, positions, fmt
+    return (q, kf.astype(jnp.bfloat16), vf.astype(jnp.bfloat16), None, None,
+            tables, lengths, kv_valid, positions, None)
+
+
+def _gather_path(q, kc, vc, ks, vs, tables, lengths, kv_valid, positions,
+                 fmt, int_attention, policy):
+    """The pre-fused layers composition: materialise the contiguous view,
+    then masked attention over it — the numerics contract the fused op
+    must reproduce bit-for-bit."""
+    if fmt is not None and int_attention:
+        return L.int8_decode_attention(
+            q, L.gather_block_kv(kc, tables), L.gather_block_kv(vc, tables),
+            L.gather_block_kv(ks, tables), L.gather_block_kv(vs, tables),
+            fmt, policy, positions=positions, kv_valid_len=kv_valid)
+    if fmt is not None:
+        k_full = dequantize(L.gather_block_kv(kc, tables),
+                            L.gather_block_kv(ks, tables), jnp.bfloat16)
+        v_full = dequantize(L.gather_block_kv(vc, tables),
+                            L.gather_block_kv(vs, tables), jnp.bfloat16)
+    else:
+        k_full, v_full = (L.gather_block_kv(kc, tables),
+                          L.gather_block_kv(vc, tables))
+    return L.chunked_attention(q, k_full, v_full, causal=True,
+                               q_offset=lengths, policy=policy,
+                               kv_valid_len=kv_valid)
+
+
+CASES = [
+    ("fp-exact", False, False, None),
+    ("fp-cordic", False, False, "cordic"),
+    ("int8kv-exact", True, False, "exact"),
+    ("int8kv-cordic", True, False, "cordic"),
+    ("intattn-exact", True, True, "exact"),
+    ("intattn-cordic", True, True, "cordic"),
+]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name,quant,int_attn,impl", CASES,
+                         ids=[c[0] for c in CASES])
+def test_fused_op_bit_exact_vs_gather_path(backend, name, quant, int_attn,
+                                           impl):
+    del name
+    (q, kc, vc, ks, vs, tables, lengths, kv_valid, positions,
+     fmt) = _pools(quant)
+    policy = (None if impl is None else
+              PrecisionPolicy.flexpe(8, af_impl=impl,
+                                     backend=backend))
+    got = dispatch.paged_attention(
+        q, kc, vc, ks, vs, tables, policy, backend, lengths=lengths,
+        kv_valid=kv_valid, positions=positions, fmt=fmt,
+        int_attention=int_attn)
+    ref = _gather_path(q, kc, vc, ks, vs, tables, lengths, kv_valid,
+                       positions, fmt, int_attn, policy)
+    # bit-exact everywhere, idle (0-length) row included: both paths see
+    # the same zero-filled unallocated positions by construction
+    np.testing.assert_array_equal(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32))
+    assert np.isfinite(np.asarray(got, np.float32)).all()
+
+
+def test_fused_op_shared_tables_rows_agree():
+    """Rows pointing at the same physical blocks with the same length
+    (prefix sharing / CoW parents) must produce identical outputs."""
+    (q, kc, vc, ks, vs, tables, lengths, kv_valid, positions,
+     fmt) = _pools(True)
+    q = q.at[2].set(q[0])            # same query too
+    out = dispatch.paged_attention(
+        q, kc, vc, ks, vs, tables, None, "pallas-interpret",
+        lengths=lengths, kv_valid=kv_valid, positions=positions, fmt=fmt)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[2]))
+
+
+# ---------------------------------------------------------------------------
+# engine level: the fused path serves decode for every cache family
+# ---------------------------------------------------------------------------
+
+def _params(cfg):
+    return M.init_params(cfg, KEY, dtype=jnp.float32)
+
+
+def _prompt(i, plen, cfg, shared=0):
+    sys_p = jax.random.PRNGKey(2)
+    tail_k = jax.random.fold_in(jax.random.PRNGKey(1), i)
+    if cfg.input_mode == "tokens":
+        head = jax.random.randint(sys_p, (shared,), 0, cfg.vocab)
+        tail = jax.random.randint(tail_k, (plen,), 0, cfg.vocab)
+    else:
+        head = jax.random.normal(sys_p, (shared, cfg.d_model), jnp.bfloat16)
+        tail = jax.random.normal(tail_k, (plen, cfg.d_model), jnp.bfloat16)
+    return jnp.concatenate([head, tail]) if shared else tail
+
+
+def _req(i, plen, cfg, gen=5, shared=0):
+    return Request(prompt=_prompt(i, plen, cfg, shared=shared),
+                   max_new_tokens=gen, id=i)
+
+
+def _run(cfg, p, reqs, policy=None, **kw):
+    eng = ServingEngine(cfg, p, policy=policy, max_slots=2, max_len=24,
+                        prefill_chunk=4, **kw)
+    return {f.id: f.tokens for f in eng.run(reqs)}
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_engine_fused_paged_matches_contiguous(arch):
+    """Greedy decode with the fused paged-attention hot loop is
+    token-identical to the contiguous engine for every cache family."""
+    cfg = get_config(arch).reduced()
+    p = _params(cfg)
+    reqs = lambda: [_req(i, pl, cfg) for i, pl in
+                    [(0, 5), (1, 11), (2, 8)]]
+    assert _run(cfg, p, reqs()) == _run(cfg, p, reqs(), kv_block_size=4)
+
+
+@pytest.mark.parametrize("int_attn", [False, True],
+                         ids=["dequant", "int-attention"])
+def test_engine_fused_paged_int8_kv_pallas_interpret(int_attn):
+    """int8-KV policies on the pallas-interpret backend: the fused kernel
+    (and its int+cordic reference fallback) keep token equality with the
+    contiguous layout."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    pol = PrecisionPolicy.flexpe(8, backend="pallas-interpret")
+    if int_attn:
+        import dataclasses
+        pol = dataclasses.replace(pol, int_attention=True)
+    reqs = lambda: [_req(0, 9, cfg), _req(1, 4, cfg)]
+    assert (_run(cfg, p, reqs(), policy=pol)
+            == _run(cfg, p, reqs(), policy=pol, kv_block_size=4))
+
+
+def test_engine_fused_paged_prefix_cached():
+    """Shared/CoW block tables (prefix cache hits) feed the fused kernel
+    the same physical blocks from several rows; tokens must still match
+    the cold contiguous run."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    p = _params(cfg)
+    reqs = lambda: [_req(i, 3, cfg, shared=8) for i in range(3)]
+    cold = _run(cfg, p, reqs())
+    warm = _run(cfg, p, reqs(), kv_block_size=4, prefix_cache=True)
+    assert cold == warm

@@ -57,6 +57,29 @@ def test_paged_cache_update_writes_through_block_table():
     np.testing.assert_array_equal(np.asarray(view)[0, 1:3, 0, 0], [1.0, 2.0])
 
 
+def test_gather_unallocated_entries_read_zeros_not_block0():
+    """Regression: unallocated table slots (sentinel NB) gather exact
+    zeros by construction — clip-mode used to read block 0's LIVE data
+    into positions the attention kernels then had to mask."""
+    nb, bs, kvh, hd = 4, 2, 1, 3
+    pool = (jnp.arange(nb * bs * kvh * hd, dtype=jnp.float32)
+            .reshape(nb, bs, kvh, hd) + 1.0)   # block 0: live, nonzero
+    bt = jnp.array([[0, nb], [nb, nb]], jnp.int32)
+    view = np.asarray(L.gather_block_kv(pool, bt))
+    np.testing.assert_array_equal(view[0, :bs], np.asarray(pool[0]))
+    assert (view[0, bs:] == 0).all()    # unallocated tail: exact zeros
+    assert (view[1] == 0).all()         # fully idle row: exact zeros
+
+
+def test_init_cache_tables_start_unallocated():
+    """Fresh paged caches mark every table slot with the sentinel NB, so
+    no row can resolve a block it was never allocated."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    cache = M.init_cache(cfg, 2, 16, kv_block_size=4)
+    nb = cache["kv"]["k"].shape[1]
+    assert (np.asarray(cache["block_tables"]) == nb).all()
+
+
 def test_gather_block_view_matches_contiguous_cache():
     """Writing the same ragged window into a contiguous buffer and a paged
     pool yields identical gathered views over the valid region."""
