@@ -26,9 +26,12 @@ tok/s is printed for trend-watching and gated only under
 reference).
 
 After an intentional perf change, refresh the baseline with
-    PYTHONPATH=src python benchmarks/bench_serving.py \
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python benchmarks/bench_serving.py --tp 2 \
         --json benchmarks/baselines/serving.json
-and commit it alongside the change. For the wall-clock-derived ratios
+(the forced device count + --tp 2 keep the tensor-parallel metrics in
+the baseline — CI gates `tp_kv_bytes_per_device_reduction`) and commit
+it alongside the change. For the wall-clock-derived ratios
 (`speedup_vs_static`, `paged_speedup_vs_static`) prefer committing a
 value somewhat BELOW a fast dev machine's measurement: the gate only
 fires on drops below the floor, so a conservative baseline keeps the
@@ -42,13 +45,23 @@ import json
 import sys
 
 GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio",
-         "prefix_prefill_reduction", "paged_attn_gather_bytes_reduction")
+         "prefix_prefill_reduction", "paged_attn_gather_bytes_reduction",
+         # tensor-parallel per-device KV pool bytes, tp=1 over tp=N — a
+         # deterministic shapes-x-shardings ratio (== tp when the block
+         # axis splits evenly); CI runs bench_serving with --tp 2 under
+         # forced host devices, so the metric is always present there
+         "tp_kv_bytes_per_device_reduction")
 # metric -> exclusive ceiling, independent of the baseline file
 ABSOLUTE_CEILINGS = {"sample_syncs_per_token": 1.0}
 INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
                  "prefix_ttft_ratio", "overlap_speedup_vs_sync",
                  "paged_attn_gather_bytes_before_mb",
-                 "paged_attn_gather_bytes_after_mb")
+                 "paged_attn_gather_bytes_after_mb",
+                 # forced CPU "devices" share one socket — wall-clock tp
+                 # speedup means nothing there; the weight ratio depends
+                 # on how much of the arch is quantized, so both inform
+                 "tp_weight_bytes_per_device_reduction",
+                 "tp_speedup_vs_single")
 
 
 def main(argv=None) -> int:

@@ -14,6 +14,12 @@ against it, not just plausible), paged block-pool cache
 runs disagrees on greedy tokens. Backend choice scales the workload down
 for the slower interpreted Pallas kernels.
 
+`--tp N` (on a multi-device host, e.g. CPU CI's forced
+XLA_FLAGS=--xla_force_host_platform_device_count=8) additionally runs
+the contiguous and prefix-cache workloads tensor-parallel and requires
+token equality with the tp=1 anchors — sharded serving is a pure
+performance transform, never a numerics change.
+
 The paged runs exercise the fused paged-attention op on the decode hot
 loop (kernels/paged_attention via dispatch — reference impl under
 `--backend reference`, the block-table-walking Pallas kernel in
@@ -44,6 +50,11 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="reference", choices=list(WORKLOADS))
     ap.add_argument("--arch", default="qwen2_5_14b")
     ap.add_argument("--kv-block-size", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="also run the workload tensor-parallel at this "
+                         "degree and require token equality with the tp=1 "
+                         "anchor (needs >= tp devices; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args(argv)
 
     n, slots, plen, gen, chunk, shared = WORKLOADS[args.backend]
@@ -69,6 +80,27 @@ def main(argv=None) -> int:
             "sync": {f.id: f.tokens for f in sync},
             "paged": {f.id: f.tokens for f in paged},
             "prefix-cache": {f.id: f.tokens for f in cached}}
+    if args.tp > 1:
+        # sharded runs must stay token-identical to the tp=1 anchors:
+        # quantized weights + the paged pool's block axis split over the
+        # mesh, everything exact-under-sharding by construction
+        tp = ["--tp", str(args.tp)]
+        print(f"== contiguous KV, tp={args.tp} ({args.backend}) ==")
+        runs[f"contiguous-tp{args.tp}"] = {
+            f.id: f.tokens for f in serve.main(base + tp)}
+        print(f"== paged KV + prefix cache, tp={args.tp} "
+              f"({args.backend}) ==")
+        # round the pool up to a multiple of tp so the block axis really
+        # shards (byte parity can land on an odd count, which gracefully
+        # degrades to a replicated pool — not what this run is for);
+        # decode tokens are independent of pool size and physical block
+        # ids, so the anchor comparison still holds bit-exactly
+        parity = -(-(plen + shared + gen + chunk) // args.kv_block_size)
+        pool = -(-parity * slots // args.tp) * args.tp
+        runs[f"prefix-cache-tp{args.tp}"] = {
+            f.id: f.tokens for f in serve.main(
+                paged_args + ["--prefix-cache", "--kv-blocks", str(pool)]
+                + tp)}
     ok = True
     for name, toks in runs.items():
         if name == "contiguous":

@@ -91,6 +91,16 @@ class QuantizedTensor:
         return int(self.data.size * self.data.dtype.itemsize
                    + self.scale.size * self.scale.dtype.itemsize)
 
+    @property
+    def lane_granularity(self) -> int:
+        """Smallest channel-count unit a last-dim (output-feature) shard
+        may hold. Packed FxP4 stores `lanes_per_word` channels per int32
+        word, so a tensor-parallel split of the packed dim is only valid
+        when `n % (lane_granularity * shards) == 0` — whole words per
+        shard, no pad nibbles straddling a shard boundary. Unpacked codes
+        split at channel granularity (1)."""
+        return self.fmt.lanes_per_word if self.packed else 1
+
     def codes(self) -> jax.Array:
         """Sign-extended integer codes [.., K, N] (unpacks FxP4 words)."""
         if not self.packed:

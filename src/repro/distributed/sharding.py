@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..core.qtensor import QuantizedTensor
+
 # logical axis -> mesh axes, per preset
 RULES_TP = {
     "vocab": "model", "qkv": "model", "kv_qkv": None, "heads": "model",
@@ -31,15 +33,32 @@ RULES_TP = {
 }
 # FSDP: embed (the non-TP dim of every big matrix) shards over data
 RULES_FSDP = dict(RULES_TP, embed="data")
+# Serving TP: the bit-exactness-preserving subset of RULES_TP. Sharding a
+# float weight's contraction dim (or an activation dim a later float
+# reduction crosses) changes float summation order, so tp>1 would no
+# longer be token-identical to tp==1. Integer accumulation IS associative,
+# which is why QuantizedTensor leaves shard freely under these rules
+# (cross-shard K reductions all-reduce exact int32 partials) while float
+# leaves replicate except the embedding table (a vocab-dim gather — also
+# exact, and the tied lm_head it transposes into only shards the output
+# dim). SSM inner/head dims stay replicated: the mamba2 recurrence mixes
+# float contractions across them.
+RULES_SERVE_TP = dict(RULES_TP, ssm_inner=None, ssm_heads=None)
 
 
 @dataclasses.dataclass(frozen=True)
 class MeshRules:
     mesh: Mesh
     fsdp: bool = False
+    # serving preset: only exact-under-sharding params split (quantized
+    # weights, the embedding gather) so multi-device decode stays
+    # token-identical to single-device — see RULES_SERVE_TP
+    serve: bool = False
 
     @property
     def rules(self):
+        if self.serve:
+            return RULES_SERVE_TP
         return RULES_FSDP if self.fsdp else RULES_TP
 
     @property
@@ -60,14 +79,26 @@ class MeshRules:
 
         With `spec_tree` (arrays or ShapeDtypeStructs, same structure),
         any dim whose size does not divide the assigned mesh axis is
-        replicated instead — the divisibility safety net."""
+        replicated instead — the divisibility safety net. A
+        `QuantizedTensor` spec leaf resolves to a QuantizedTensor of
+        NamedShardings for (codes, scale) — structurally a valid sharding
+        tree for both `jax.device_put` and jit `in_shardings` — with the
+        packed-lane boundary guard (see `_qtensor_sharding`)."""
         def is_leaf(x):
             return isinstance(x, tuple) or x is None
         if spec_tree is None:
             return jax.tree.map(self.sharding_for, axes_tree, is_leaf=is_leaf)
 
         def resolve(axes, spec):
+            if isinstance(spec, QuantizedTensor):
+                return self._qtensor_sharding(axes, spec)
             if axes is None:
+                return NamedSharding(self.mesh, P())
+            if self.serve and axes != ("vocab", "embed"):
+                # serving preset: float weights replicate — only the
+                # embedding table (vocab-dim gather, exact under
+                # sharding) and QuantizedTensor leaves split. See
+                # RULES_SERVE_TP for why.
                 return NamedSharding(self.mesh, P())
             names, used = [], set()
             for dim, a in zip(spec.shape, axes):
@@ -84,6 +115,41 @@ class MeshRules:
             return NamedSharding(self.mesh, P(*names))
 
         return jax.tree.map(resolve, axes_tree, spec_tree, is_leaf=is_leaf)
+
+    def _qtensor_sharding(self, axes, qt: QuantizedTensor):
+        """Sharding pair for one quantized weight: codes sharded by the
+        logical-axis rules, the per-channel scale sharded iff the codes'
+        channel (last) dim is. The last dim additionally honours the
+        packed-lane boundary: FxP4 stores `lane_granularity` channels per
+        int32 word, so a model-parallel split must hand every shard whole
+        words AND an equal slice of the un-padded logical channel count
+        (`n % (size * lanes) == 0`); anything else replicates."""
+        rep = NamedSharding(self.mesh, P())
+        if axes is None:
+            return QuantizedTensor(rep, rep, qt.fmt_name, qt.n, qt.packed)
+        lanes = qt.lane_granularity
+        names, used = [], set()
+        nd = qt.data.ndim
+        for i, (dim, a) in enumerate(zip(qt.data.shape, axes)):
+            m = self.rules.get(a)
+            if m is not None:
+                size = self.mesh.shape[m]
+                ok = dim % size == 0 and m not in used
+                if i == nd - 1:
+                    ok = ok and qt.n % (size * lanes) == 0
+                if not ok:
+                    m = None
+            if m is not None:
+                used.add(m)
+            names.append(m)
+        data_sh = NamedSharding(self.mesh, P(*names))
+        snames = [None] * qt.scale.ndim
+        if (names and names[-1] is not None
+                and qt.scale.shape[-1] % self.mesh.shape[names[-1]] == 0):
+            snames[-1] = names[-1]
+        scale_sh = NamedSharding(self.mesh, P(*snames))
+        return QuantizedTensor(data_sh, scale_sh, qt.fmt_name, qt.n,
+                               qt.packed)
 
     # -- activation specs ---------------------------------------------------
     def act(self, *rest) -> NamedSharding:

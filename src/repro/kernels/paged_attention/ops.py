@@ -25,6 +25,30 @@ from .paged_attention import (paged_attention_float_pallas,
 from .ref import _exp_fn, _final_div
 
 
+def shard_local_tables(block_tables, shard, blocks_per_shard, num_blocks):
+    """Rebase a GLOBAL block table onto one pool shard's LOCAL ids.
+
+    A tensor-parallel pool splits its block axis into contiguous ranges of
+    `blocks_per_shard` ids per shard; this maps every table entry owned by
+    `shard` to its local index and every other entry — other shards'
+    blocks and the global unallocated sentinel `num_blocks` — to the LOCAL
+    sentinel `blocks_per_shard` (one past the shard's pool slice). The
+    result is exactly the table contract the fused kernel already honours
+    on a whole pool: sentinel entries stage a zeroed block and their
+    positions sit above every row's valid length, so the kernel run per
+    shard over (pool slice, local table) visits exactly that shard's
+    resident KV — and when a row's blocks all live on one shard, that
+    single run IS the full-pool result for the row. The serving
+    fallback path doesn't need this (its `jnp.take` partitions exactly
+    under GSPMD); it exists so a shard_mapped kernel launch can hand each
+    device its table slice without host-side table rewrites."""
+    lo = shard * blocks_per_shard
+    local = block_tables - lo
+    mine = (block_tables >= lo) & (block_tables < lo + blocks_per_shard)
+    del num_blocks  # any non-owned id (sentinel included) maps the same way
+    return jnp.where(mine, local, blocks_per_shard).astype(jnp.int32)
+
+
 def paged_attention(q, k_pool, v_pool, k_scale, v_scale, block_tables, *,
                     lengths, kv_valid, positions, fmt=None,
                     int_attention: bool = False,

@@ -67,3 +67,22 @@ def make_host_mesh(model_parallel: int = 1) -> Mesh:
     mp = math.gcd(model_parallel, n)
     return jax.make_mesh((n // mp, mp), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_tp_mesh(tp: int = 1) -> Mesh:
+    """Serving tensor-parallel mesh: (data=1, model=tp) over the first
+    `tp` devices. Unlike `make_host_mesh` this never silently degrades —
+    asking for more model parallelism than there are devices is a
+    configuration error, not a preference."""
+    devices = jax.devices()
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if len(devices) < tp:
+        raise RuntimeError(
+            f"tensor-parallel serving with tp={tp} needs {tp} devices, have "
+            f"{len(devices)} — on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={tp} before importing "
+            "jax")
+    return jax.make_mesh((1, tp), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                         devices=devices[:tp])

@@ -50,7 +50,7 @@ from ..core.qtensor import packed_bytes, quantize_params
 from ..models import model as M
 from ..serving import Request, SamplingParams, ServingEngine
 from ..serving.scheduler import POLICIES
-from .mesh import make_host_mesh
+from .mesh import make_tp_mesh
 from .train import policy_from_name
 
 
@@ -136,13 +136,18 @@ def main(argv=None):
     ap.add_argument("--temp", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: shard quantized weights "
+                         "and the paged KV block pool over a (1, tp) mesh "
+                         "(token-identical to --tp 1; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     policy = policy_from_name(args.policy).with_backend(args.backend)
-    mesh = make_host_mesh()
+    mesh = make_tp_mesh(args.tp)
     with mesh:
         params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
         # quantize-once surgery for EVERY backend when the policy is FxP:
@@ -197,6 +202,11 @@ def main(argv=None):
     if engine.paged:
         print(f"paged KV: {st['kv_blocks']} blocks x {st['kv_block_size']} "
               f"tokens, peak in use {st['peak_blocks_used']}")
+    if args.tp > 1:
+        db = engine.ex.device_bytes()
+        print(f"tp={args.tp}: {db['weight_bytes'] / 2**20:.2f} MiB weights "
+              f"and {db['kv_bytes'] / 2**20:.2f} MiB KV resident per device "
+              f"({engine.ex.pool_shards} pool shards)")
     if "prefix_cache" in st:
         pc = st["prefix_cache"]
         print(f"prefix cache: {st['prefix_tokens_reused']} prompt tokens "

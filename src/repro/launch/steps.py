@@ -90,24 +90,38 @@ def batch_shardings(rules: MeshRules, tree, batch: int):
 def cache_shardings(cfg, rules: MeshRules, cache_tree, batch: int):
     """KV caches: batch over dp, SEQUENCE over model (split-KV decode —
     kv_heads (8) < model axis (16), so heads can't carry TP). SSM states:
-    heads over model. Paged pools ([L, NB, bs, KV, hd], no batch axis) and
-    block tables are replicated — sharded paged serving is a ROADMAP
-    follow-up (the engine jits without in_shardings on a host mesh)."""
+    heads over model. Paged pools ([L, NB, bs, KV, hd], no batch axis)
+    partition their BLOCK axis over `model` — blocks are the natural
+    shard unit: scatters (`paged_cache_update`) and table gathers
+    (`gather_block_kv`) are index operations, exact under GSPMD, and
+    per-device pool bytes scale 1/tp. Block tables and lengths stay
+    replicated (the host-side allocator and ledger are global; physical
+    block ids map to shards implicitly as `blk // (NB // tp)`). A pool
+    whose NB doesn't divide the model axis falls back to replicated via
+    the divisibility net (so do the bf16-cache scale stubs, NB dim 1)."""
     dp = _dp_or_none(rules, batch)
     mesh = rules.mesh
     paged = isinstance(cache_tree, dict) and "block_tables" in cache_tree
+    # serving preset: attention contracts over the KV sequence dim and the
+    # ssm recurrence feeds float contractions over heads — sharding either
+    # changes float summation order, so only the paged pool's block axis
+    # splits (gathers/scatters are exact); everything else replicates and
+    # tp>1 decode stays token-identical to tp==1
+    seq_tp = None if rules.serve else "model"
 
     def leaf_spec(path, s):
         names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
-        if paged and ("kv" in names or "block_tables" in names):
+        if paged and "block_tables" in names:
             return P()
-        if "kv" in names:     # [L, B, S, KV, hd] (+scales [L,B,S,KV,1])
-            spec = P(None, dp, "model", None, None)
+        if paged and "kv" in names:   # pool [L, NB, bs, KV, hd] (+scales)
+            spec = P(None, "model", None, None, None)
+        elif "kv" in names:   # [L, B, S, KV, hd] (+scales [L,B,S,KV,1])
+            spec = P(None, dp, seq_tp, None, None)
         elif "ssm" in names:
             if len(s.shape) == 5:   # [L, B, H, P, N]
-                spec = P(None, dp, "model", None, None)
+                spec = P(None, dp, seq_tp, None, None)
             else:
-                spec = P(None, dp, None, "model")  # conv [L, B, cw-1, ch]
+                spec = P(None, dp, None, seq_tp)  # conv [L, B, cw-1, ch]
         else:
             return P()  # cache["len"]
         # divisibility safety net (e.g. bf16-cache scale stubs have S=1)
@@ -228,17 +242,24 @@ def build_train_step(cfg: ModelConfig, mesh, policy: Optional[PrecisionPolicy],
 def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
                        shape_name: str = "prefill_32k",
                        with_cache: bool = False, batch=None, max_len=None,
-                       chunk=None, kv_block_size=None, kv_blocks=None):
+                       chunk=None, kv_block_size=None, kv_blocks=None,
+                       params_spec=None):
     """Cache-less full-prompt prefill (forward last_only — dry-run cost
     cells), or, `with_cache=True`, the serving engine's chunked prefill:
     a [1, chunk] token block run against ONE slot's cache row (sliced out
     of the [batch]-row pool by traced `slot` index) — one jitted call
     bulk-writes a chunk of a request's prompt into its slot and returns
     last-valid logits. Prefill cost therefore scales with the prompt being
-    admitted, not with the slot-pool width."""
+    admitted, not with the slot-pool width.
+
+    `params_spec` (the serving executor's actual param tree, possibly
+    holding QuantizedTensor leaves, as arrays or ShapeDtypeStructs)
+    switches to the serving TP rules: shardings are resolved against the
+    REAL quantized structure instead of the float init layout."""
     if with_cache:
-        rules = MeshRules(mesh, fsdp=fsdp)
-        params_specs = model_state_specs(cfg, with_opt=False)
+        rules = MeshRules(mesh, fsdp=fsdp, serve=params_spec is not None)
+        params_specs = (params_spec if params_spec is not None
+                        else model_state_specs(cfg, with_opt=False))
         p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
         specs = input_specs(cfg, "decode_32k", policy, batch=batch,
                             max_len=max_len, chunk=chunk or 1,
@@ -253,14 +274,18 @@ def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
         def prefill_step(params, cache, tokens, n_valid, slot):
             sub = M.slice_cache_rows(cache, slot, 1)
             logits, new_sub = M.decode_step(cfg, params, sub, tokens,
-                                            policy=policy, n_valid=n_valid,
-                                            last_only=True)
+                                            policy=policy, shard=rules,
+                                            n_valid=n_valid, last_only=True)
             return logits[:, -1, :], M.update_cache_rows(cache, new_sub, slot)
 
         b = batch if batch is not None else SHAPES["decode_32k"]["global_batch"]
         c_shard = cache_shardings(cfg, rules, specs["cache"], b)
         rep = NamedSharding(mesh, P())
-        out_shardings = (NamedSharding(mesh, P(None, "model")), c_shard)
+        # serving: replicate logits — the sampler argmaxes/sorts the full
+        # vocab on every shard (exact), so no cross-shard gather sits on
+        # the decode critical path
+        lg = rep if rules.serve else NamedSharding(mesh, P(None, "model"))
+        out_shardings = (lg, c_shard)
         return (prefill_step, p_shard, specs,
                 (p_shard, c_shard, rep, rep, rep), out_shardings)
     rules = MeshRules(mesh, fsdp=fsdp)
@@ -284,13 +309,18 @@ def build_prefill_step(cfg, mesh, policy, fsdp: bool = False,
 def build_serve_step(cfg, mesh, policy, fsdp: bool = False,
                      shape_name: str = "decode_32k", batch=None,
                      max_len=None, chunk=1, kv_block_size=None,
-                     kv_blocks=None):
+                     kv_blocks=None, params_spec=None):
     """The ragged serving step: tokens [B, chunk] + n_valid [B] against the
     slot-pool cache. chunk=1 is plain decode; chunk>1 is the engine's
     chunked prefill (same step, wider block). Returns last-valid-position
-    logits [B, V] (lm_head never sees [B, chunk, V])."""
-    rules = MeshRules(mesh, fsdp=fsdp)
-    params_specs = model_state_specs(cfg, with_opt=False)
+    logits [B, V] (lm_head never sees [B, chunk, V]).
+
+    `params_spec` switches to the serving TP preset, resolving shardings
+    against the real (possibly quantized) param tree — see
+    `build_prefill_step`."""
+    rules = MeshRules(mesh, fsdp=fsdp, serve=params_spec is not None)
+    params_specs = (params_spec if params_spec is not None
+                    else model_state_specs(cfg, with_opt=False))
     p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
     specs = input_specs(cfg, shape_name, policy, batch=batch,
                         max_len=max_len, chunk=chunk,
@@ -308,6 +338,8 @@ def build_serve_step(cfg, mesh, policy, fsdp: bool = False,
                                           n_valid=n_valid, last_only=True)
         return logits[:, -1, :], new_cache
 
-    out_shardings = (NamedSharding(mesh, P(dp, "model")), c_shard)
+    lg = (NamedSharding(mesh, P())
+          if rules.serve else NamedSharding(mesh, P(dp, "model")))
+    out_shardings = (lg, c_shard)
     return (serve_step, p_shard, specs,
             (p_shard, c_shard, t_shard, n_shard), out_shardings)

@@ -327,7 +327,7 @@ def ragged_cache_update(buf, new, start, count):
 
 
 def attention(p, x, cfg, *, positions, policy=None, cache=None,
-              lengths=None, n_valid=None, block_tables=None):
+              lengths=None, n_valid=None, block_tables=None, pool_tp=1):
     """Returns (out, new_cache_entry|None).
 
     Training/prefill: cache=None -> full chunked attention over x.
@@ -352,6 +352,13 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
     because a row only ever writes at [lengths, lengths+n_valid), and the
     engine copy-on-writes any shared block before a row's write window
     reaches it.
+
+    `pool_tp` > 1 says the pool's block axis is partitioned over that many
+    mesh shards: the fused Pallas kernel (whose in-kernel block addressing
+    assumes the whole pool is local) is skipped in favour of the
+    gather+masked path — `jnp.take` over a sharded block axis is an index
+    op GSPMD partitions exactly, so the fallback stays bit-identical to
+    the fused kernel's single-shard output.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -405,7 +412,7 @@ def attention(p, x, cfg, *, positions, policy=None, cache=None,
         new_cache = (kc, vc, k_scale, v_scale)
         int_attn = bool(kq_fmt is not None
                         and getattr(policy, "int_attention", False))
-        if paged and s == 1:
+        if paged and s == 1 and pool_tp == 1:
             # fused paged decode: the kernel walks the block table over the
             # pool in HBM directly (dequant + masking + online softmax in
             # one launch) — no gathered contiguous view is materialised.

@@ -426,6 +426,16 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
     positions = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     new_cache = dict(cache)
     block_tables = cache.get("block_tables")
+    # block-pool shard count: >1 only when a model-parallel mesh actually
+    # partitions the pool's block axis (NB divides the axis — the same
+    # divisibility rule cache_shardings applies), in which case attention
+    # drops the fused kernel for the shard-exact gather path
+    pool_tp = 1
+    if block_tables is not None and shard is not None:
+        tp = (int(shard.mesh.shape["model"])
+              if "model" in shard.mesh.axis_names else 1)
+        nb = int(cache["kv"]["k"].shape[1])
+        pool_tp = tp if tp > 1 and nb % tp == 0 else 1
 
     if cfg.family in ("dense", "moe", "vlm", "audio"):
         kv = cache["kv"]
@@ -436,7 +446,7 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
                 bp["attn"], apply_norm(x, bp["attn_norm"], cfg.norm), cfg,
                 positions=positions, policy=policy,
                 cache=(kc, vc, ks, vs), lengths=lengths, n_valid=n_valid,
-                block_tables=block_tables)
+                block_tables=block_tables, pool_tp=pool_tp)
             x = x + h
             xin = apply_norm(x, bp["mlp_norm"], cfg.norm)
             if cfg.family == "moe":
@@ -494,7 +504,7 @@ def decode_step(cfg, params, cache, tokens_or_embeds,
                 sp["attn"], apply_norm(xin, sp["attn_norm"], cfg.norm), cfg,
                 positions=positions, policy=policy, cache=kvq,
                 lengths=lengths, n_valid=n_valid,
-                block_tables=block_tables)
+                block_tables=block_tables, pool_tp=pool_tp)
             x = x + h
             x = x + mlp(sp["mlp"], apply_norm(x, sp["mlp_norm"], cfg.norm),
                         cfg.act, policy)

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..launch.mesh import make_host_mesh
+from ..launch.mesh import make_host_mesh, make_tp_mesh
 from .api import FinishedRequest, Request, RequestOutput, SamplingParams
 from .executor import ModelExecutor
 from .prefix_cache import PrefixCache
@@ -105,7 +105,7 @@ class ServingEngine:
                  mesh=None, kv_block_size: Optional[int] = None,
                  kv_blocks: Optional[int] = None, prefix_cache: bool = False,
                  scheduler: Union[str, SchedulingPolicy] = "fifo",
-                 overlap: bool = False):
+                 overlap: bool = False, tp: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -114,7 +114,15 @@ class ServingEngine:
         self.prefill_chunk = prefill_chunk
         self.seed = seed
         self.overlap = overlap
-        self.mesh = mesh if mesh is not None else make_host_mesh()
+        if tp is not None:
+            if mesh is not None:
+                raise ValueError("pass either tp or mesh, not both")
+            # explicit tensor-parallel degree: a (1, tp) mesh over exactly
+            # tp devices — tp=1 pins single-device serving even when the
+            # host exposes more (forced multi-device CI)
+            self.mesh = make_tp_mesh(tp)
+        else:
+            self.mesh = mesh if mesh is not None else make_host_mesh()
         if kv_blocks is not None and kv_block_size is None:
             raise ValueError("kv_blocks requires kv_block_size (a pool size "
                              "only makes sense for the paged layout)")
@@ -138,7 +146,8 @@ class ServingEngine:
             max_slots, max_len, policy=scheduler,
             kv_block_size=kv_block_size if self.ex.paged else None,
             num_blocks=self.ex.num_blocks, paged=self.ex.paged,
-            has_ssm=self.ex.has_ssm, prefix_cache=prefix)
+            has_ssm=self.ex.has_ssm, prefix_cache=prefix,
+            block_shards=self.ex.pool_shards)
 
         self.tick = 0
         self._inflight: deque = deque()      # dispatched, not yet drained
@@ -198,7 +207,7 @@ class ServingEngine:
             return False
         b, slot = found
         slot.done = True                 # in-flight drains become discards
-        self.sched.release(b)
+        self.sched.release(b, self.ex)
         self.aborted_requests += 1
         # work done before the abort still counts toward throughput:
         # prompt tokens actually prefilled + tokens actually drained (so
@@ -324,7 +333,7 @@ class ServingEngine:
         # events. Only EOS — unknowable until the value syncs — lags.
         for b, s, _ in dec_items + pf_items:
             if s.scheduled >= s.request.max_new_tokens and not s.released:
-                sched.release(b)
+                sched.release(b, self.ex)
 
         self._inflight.append(_InFlight(self.tick, dec_items, dec_toks,
                                         pf_items, pf_toks))
@@ -380,7 +389,7 @@ class ServingEngine:
                 self.prompt_tokens += slot.prompt_len
                 self.generated_tokens += len(slot.generated)
                 if not slot.released:       # EOS before the predicted end
-                    self.sched.release(b)   # refcounted block return
+                    self.sched.release(b, self.ex)  # refcounted block return
             events.append(out)
         if gating:
             self.sample_sync_tokens += emitted

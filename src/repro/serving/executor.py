@@ -22,13 +22,17 @@ against the same (cfg, policy, pool geometry) costs no recompile.
 """
 from __future__ import annotations
 
+import math
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from ..launch import steps as S
+from ..launch.mesh import make_host_mesh
 from ..models import model as M
 
 #: compiled (prefill, decode+sample, seed) step triples shared across
@@ -53,18 +57,28 @@ def _sample_core(vocab: int, logits, keys, temps, topks):
     return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)
 
 
-def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk,
+def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk, params,
                     kv_block_size=None, kv_blocks=None):
-    key = (cfg, policy, mesh, max_slots, alloc, chunk, kv_block_size,
-           kv_blocks)
+    """Jit the (prefill, decode+sample, seed) triple with full input/output
+    sharding trees resolved against the REAL param tree (serving TP
+    preset): QuantizedTensor codes + scales and the embedding table split
+    over `model`, everything else float replicates, and the paged pool
+    partitions its block axis. On a 1-device mesh every sharding collapses
+    to trivially-replicated and this is exactly the old unsharded jit."""
+    key = (cfg, policy, mesh, max_slots, alloc, chunk,
+           jax.tree_util.tree_structure(params), kv_block_size, kv_blocks)
     if key not in _STEP_CACHE:
-        prefill_fn, *_ = S.build_prefill_step(
+        pspec = jax.eval_shape(lambda: params)
+        prefill_fn, p_shard, _, pf_in, pf_out = S.build_prefill_step(
             cfg, mesh, policy, with_cache=True, batch=max_slots,
             max_len=alloc, chunk=chunk, kv_block_size=kv_block_size,
-            kv_blocks=kv_blocks)
-        decode_fn, *_ = S.build_serve_step(
+            kv_blocks=kv_blocks, params_spec=pspec)
+        decode_fn, _, _, dc_in, dc_out = S.build_serve_step(
             cfg, mesh, policy, batch=max_slots, max_len=alloc, chunk=1,
-            kv_block_size=kv_block_size, kv_blocks=kv_blocks)
+            kv_block_size=kv_block_size, kv_blocks=kv_blocks,
+            params_spec=pspec)
+        c_shard = dc_in[1]
+        rep = NamedSharding(mesh, P())
         vocab, d_model = cfg.vocab, cfg.d_model
         tokens_mode = cfg.input_mode == "tokens"
 
@@ -93,10 +107,19 @@ def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk,
             toks = _sample_core(vocab, logits, keys, temps, topks)
             return toks, token_buf.at[rows].set(toks)
 
+        # decode_sample wraps decode_fn, so its sharding trees extend the
+        # serve step's: token buffer / sampling knobs replicate, sampled
+        # tokens come back replicated (every shard holds the full vocab
+        # logits — seeding the next tick needs no cross-shard traffic)
         _STEP_CACHE[key] = (
-            jax.jit(prefill_fn, donate_argnums=(1,)),
-            jax.jit(decode_sample, donate_argnums=(1, 2)),
-            jax.jit(seed, donate_argnums=(0,)))
+            jax.jit(prefill_fn, donate_argnums=(1,),
+                    in_shardings=pf_in, out_shardings=pf_out),
+            jax.jit(decode_sample, donate_argnums=(1, 2),
+                    in_shardings=(p_shard, c_shard, rep, rep, rep, rep, rep),
+                    out_shardings=(rep, rep, dc_out[1])),
+            jax.jit(seed, donate_argnums=(0,),
+                    in_shardings=(rep,) * 6, out_shardings=(rep, rep)),
+            p_shard, c_shard)
     return _STEP_CACHE[key]
 
 
@@ -108,8 +131,12 @@ class ModelExecutor:
                  kv_block_size: Optional[int] = None,
                  kv_blocks: Optional[int] = None):
         self.cfg = cfg
-        self.params = params
         self.max_slots = max_slots
+        if mesh is None:
+            mesh = make_host_mesh()
+        self.mesh = mesh
+        self.tp = (int(mesh.shape["model"])
+                   if "model" in mesh.axis_names else 1)
         # over-allocate by one chunk: a ragged write window [len, len+chunk)
         # must stay in bounds for every row with len < max_len (see
         # layers.ragged_cache_update)
@@ -121,12 +148,29 @@ class ModelExecutor:
         self.has_ssm = "ssm" in self.cache
         self.num_blocks = (int(self.cache["kv"]["k"].shape[1])
                            if self.paged else 0)
-        self._prefill, self._decode_sample, self._seed = _compiled_steps(
-            cfg, policy, mesh, max_slots, alloc, prefill_chunk,
+        (self._prefill, self._decode_sample, self._seed, p_shard,
+         c_shard) = _compiled_steps(
+            cfg, policy, mesh, max_slots, alloc, prefill_chunk, params,
             kv_block_size if self.paged else None,
             self.num_blocks if self.paged else None)
-        # device-resident per-slot last-sampled-token feedback buffer
-        self._token_buf = jnp.zeros((max_slots,), jnp.int32)
+        # place params/cache exactly where the compiled steps expect them —
+        # each tick's dispatch then moves zero bytes between shards
+        self.params = jax.device_put(params, p_shard)
+        self.cache = jax.device_put(self.cache, c_shard)
+        # physical-block -> shard mapping (the pool partitions its block
+        # axis contiguously, so shard = blk // blocks_per_shard); when NB
+        # doesn't divide tp the sharding fell back to replicated and the
+        # pool is effectively single-shard
+        self.pool_shards = (self.tp if self.paged and self.tp > 1
+                            and self.num_blocks % self.tp == 0 else 1)
+        self.blocks_per_shard = (self.num_blocks // self.pool_shards
+                                 if self.pool_shards else 0)
+        # device-resident per-slot last-sampled-token feedback buffer,
+        # replicated: each shard reads its own copy next tick (no per-tick
+        # host sync, no cross-shard fetch)
+        self._token_buf = jax.device_put(
+            jnp.zeros((max_slots,), jnp.int32),
+            NamedSharding(mesh, P()))
         # host mirrors of the device-side control arrays: admission and
         # block allocation write here, `flush` applies each tick's
         # mutations as ONE device update per array (never one dispatch
@@ -143,6 +187,26 @@ class ModelExecutor:
         self._ssm_reset_rows: List[int] = []
         self.h2d_updates = 0         # control-array device writes (flushes)
         self.cow_copies = 0
+
+    # -- shard topology ------------------------------------------------------
+
+    def shard_of_block(self, blk: int) -> int:
+        """Which `model`-axis shard physically holds pool block `blk`."""
+        return blk // self.blocks_per_shard if self.pool_shards > 1 else 0
+
+    def device_bytes(self) -> dict:
+        """Per-device resident bytes {weight_bytes, kv_bytes}: the sum of
+        each array's LOCAL shard size, i.e. what one device actually
+        stores — sharded leaves count 1/tp of their global footprint,
+        replicated leaves count in full."""
+        def local(a):
+            return (math.prod(a.sharding.shard_shape(a.shape))
+                    * a.dtype.itemsize)
+
+        wb = sum(local(a) for a in jax.tree.leaves(self.params))
+        kv = self.cache["kv"] if "kv" in self.cache else {}
+        kb = sum(local(a) for a in jax.tree.leaves(kv))
+        return {"weight_bytes": int(wb), "kv_bytes": int(kb)}
 
     # -- mirror-write protocol (the scheduler's view of the device) ---------
 

@@ -109,13 +109,23 @@ class Scheduler:
                  kv_block_size: Optional[int] = None,
                  num_blocks: Optional[int] = None, paged: bool = False,
                  has_ssm: bool = False,
-                 prefix_cache: Optional[PrefixCache] = None):
+                 prefix_cache: Optional[PrefixCache] = None,
+                 block_shards: int = 1):
         self.max_slots = max_slots
         self.max_len = max_len
         self.policy = make_policy(policy)
         self.kv_block_size = kv_block_size
         self.paged = paged
         self.has_ssm = has_ssm
+        # >1 when the device pool's block axis is partitioned over that
+        # many mesh shards (contiguous ranges of block ids per shard):
+        # allocation then round-robins across shards so live KV — and the
+        # scatter/gather traffic it drives — balances instead of piling
+        # onto whichever shard's ids top the free list. Pure preference:
+        # ids stay global, the ledger/invariants don't change, and any
+        # block still serves any request.
+        self.block_shards = max(int(block_shards), 1)
+        self._next_shard = 0
         self.slots: List[Optional[SlotState]] = [None] * max_slots
         self.pending: List[Request] = []
         self._next_id = 0
@@ -210,7 +220,7 @@ class Scheduler:
         out (an admitted request's worst case is always covered by free
         plus evictable blocks)."""
         if self._free:
-            blk = self._free.pop()
+            blk = self._pop_free()
         else:
             blk = (self._prefix.evict_lru(lambda b: self._ref[b] == 0)
                    if self._prefix is not None else None)
@@ -226,6 +236,26 @@ class Scheduler:
         in_use = (self.num_blocks - len(self._free) - self._cached_unheld)
         self.peak_blocks_used = max(self.peak_blocks_used, in_use)
         return blk
+
+    def _shard_of(self, blk: int) -> int:
+        """Which pool shard holds block `blk` (contiguous id ranges)."""
+        return blk // (self.num_blocks // self.block_shards)
+
+    def _pop_free(self) -> int:
+        """Pop a free block, round-robining the preferred shard when the
+        pool is partitioned. Scans from the tail so the single-shard case
+        degenerates to exactly the historical `_free.pop()` (LIFO reuse
+        keeps recently-touched blocks hot); if the preferred shard has no
+        free block the plain pop serves — preference never blocks
+        allocation."""
+        if self.block_shards == 1:
+            return self._free.pop()
+        want = self._next_shard
+        self._next_shard = (want + 1) % self.block_shards
+        for i in range(len(self._free) - 1, -1, -1):
+            if self._shard_of(self._free[i]) == want:
+                return self._free.pop(i)
+        return self._free.pop()
 
     def _unref(self, blk: int):
         """Drop one slot's hold on `blk`; recycle it only when no slot
@@ -348,7 +378,7 @@ class Scheduler:
             executor.write_table(b, len(slot.blocks), blk)
             slot.blocks.append(blk)
 
-    def release(self, b: int):
+    def release(self, b: int, executor=None):
         """Free slot b (EOS / length / abort): refcounted block return —
         a block reaches the free list only when no slot holds it and it
         backs no prefix-cache entry — and drop the request id. Length
@@ -356,11 +386,27 @@ class Scheduler:
         the scheduled count), which keeps overlapped admission timing
         identical to the sync loop; any still-in-flight device work for
         the row lands before the next occupant's writes in dispatch
-        order, so the stale KV is overwritten-or-masked as usual."""
+        order, so the stale KV is overwritten-or-masked as usual.
+
+        When `executor` is given, the freed row's device mirrors are
+        reset (length -> 0, table row -> sentinel) so a dead row attends
+        over NOTHING until re-admitted. This is a correctness point, not
+        hygiene: activation quantization uses a per-tensor dynamic scale
+        (max|x| over the whole batch), so a dead row left gathering
+        whatever now occupies its released — possibly recycled — pool
+        blocks feeds allocation-order-dependent garbage into every live
+        row's quantization grid. Resetting the mirrors makes decode
+        output a function of the LIVE batch only, independent of
+        physical block-id assignment (which tensor-parallel round-robin
+        allocation deliberately perturbs)."""
         slot = self.slots[b]
         if self.paged:
             for blk in slot.blocks:
                 self._unref(blk)
+        if executor is not None:
+            executor.set_length(b, 0)
+            if self.paged:
+                executor.reset_table_row(b)
         self._committed -= slot.blocks_need
         self._active_ids.discard(slot.request.id)
         slot.released = True

@@ -192,3 +192,40 @@ def test_engine_fused_paged_prefix_cached():
     cold = _run(cfg, p, reqs())
     warm = _run(cfg, p, reqs(), kv_block_size=4, prefix_cache=True)
     assert cold == warm
+
+
+def test_shard_local_tables_rebase():
+    """shard_local_tables maps a GLOBAL block table onto one pool shard's
+    LOCAL ids: owned entries rebase to [0, blocks_per_shard), everything
+    else (other shards' blocks AND the global sentinel) becomes the
+    LOCAL sentinel — and running the fused kernel per shard over a
+    single-shard-resident row reproduces the full-pool walk."""
+    from repro.kernels.paged_attention.ops import shard_local_tables
+    nb, bps = 8, 4                       # 2 shards of 4 blocks
+    tables = jnp.asarray([[0, 5, 3, nb],
+                          [4, 7, nb, nb]], jnp.int32)
+    t0 = np.asarray(shard_local_tables(tables, 0, bps, nb))
+    t1 = np.asarray(shard_local_tables(tables, 1, bps, nb))
+    np.testing.assert_array_equal(t0, [[0, bps, 3, bps],
+                                       [bps, bps, bps, bps]])
+    np.testing.assert_array_equal(t1, [[bps, 1, bps, bps],
+                                       [0, 3, bps, bps]])
+    # a row resident entirely on shard 1: the shard-local kernel run over
+    # the shard's pool slice equals the global run over the whole pool
+    rng = np.random.default_rng(3)
+    kvh, g, hd, bs = 2, 3, 8, 4
+    q = jnp.asarray(rng.normal(size=(1, 1, kvh * g, hd)).astype(np.float32))
+    kf = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)).astype(np.float32))
+    vf = jnp.asarray(rng.normal(size=(nb, bs, kvh, hd)).astype(np.float32))
+    row = jnp.asarray([[4, 5, 6, nb]], jnp.int32)     # blocks on shard 1
+    lens = jnp.asarray([10], jnp.int32)
+    kvv, pos = lens + 1, lens[:, None]
+    pol = PrecisionPolicy.bf16()
+    full = dispatch.paged_attention(
+        q, kf, vf, None, None, row, pol, backend="reference",
+        lengths=lens, kv_valid=kvv, positions=pos)
+    local = dispatch.paged_attention(
+        q, kf[4:8], vf[4:8], None, None,
+        shard_local_tables(row, 1, bps, nb), pol, backend="reference",
+        lengths=lens, kv_valid=kvv, positions=pos)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(local))

@@ -203,6 +203,63 @@ def test_submit_rejects_without_leaking_state():
     assert s.submit(_req(7, 4, gen=2), tick=1) == 7   # id reusable
 
 
+def test_release_resets_row_mirrors():
+    """Release with an executor must zero the freed row's device mirrors
+    (length -> 0, table row -> sentinel): activation quantization scales
+    are per-tensor, so a dead row left gathering recycled blocks would
+    leak allocation-order-dependent garbage into live rows' grids."""
+    s = _sched(max_slots=2, kv_block_size=4, num_blocks=8, paged=True)
+    ex = MockExecutor()
+    s.submit(_req(0, 6), tick=0)
+    s.admit(tick=0, executor=ex)
+    s.ensure_blocks(0, 6, ex)
+    ex.calls.clear()
+    s.release(0, ex)
+    assert ex.of("set_length") == [("set_length", 0, 0)]
+    assert ex.of("reset_table_row") == [("reset_table_row", 0)]
+    s.check_invariants()
+    # contiguous pool: only the length mirror resets (no table exists)
+    s2, ex2 = _sched(max_slots=1), MockExecutor()
+    s2.submit(_req(1, 4), tick=0)
+    s2.admit(tick=0, executor=ex2)
+    ex2.calls.clear()
+    s2.release(0, ex2)
+    assert ex2.of("set_length") == [("set_length", 0, 0)]
+    assert ex2.of("reset_table_row") == []
+    # executor-less release (host-only tests) still frees the slot
+    s2.submit(_req(2, 4), tick=1)
+    s2.admit(tick=1, executor=ex2)
+    s2.release(0)
+    assert s2.slots[0] is None
+
+
+def test_round_robin_block_allocation_across_shards():
+    """With block_shards=k the allocator deals fresh blocks round-robin
+    across the k contiguous shard ranges (balancing a tensor-parallel
+    pool), falling back to any free block when the preferred shard is
+    dry; shard math partitions [0, num_blocks) evenly."""
+    s = _sched(max_slots=4, kv_block_size=2, num_blocks=12, paged=True,
+               block_shards=2)
+    ex = MockExecutor()
+    assert [s._shard_of(b) for b in range(12)] == [0] * 6 + [1] * 6
+    for i in range(2):
+        s.submit(_req(i, 8, gen=2), tick=0)
+    s.admit(tick=0, executor=ex)
+    s.ensure_blocks(0, 8, ex)        # 4 blocks for slot 0
+    s.ensure_blocks(1, 8, ex)        # 4 blocks for slot 1
+    for b in (0, 1):
+        got = {s._shard_of(blk) for blk in s.slots[b].blocks}
+        assert got == {0, 1}, (b, s.slots[b].blocks)
+    # exhaustion: all of shard 0 in use -> preferred-shard miss still
+    # allocates (from shard 1) rather than failing
+    s.release(1, ex)
+    s.submit(_req(2, 8, gen=2), tick=1)
+    (b2, _), = s.admit(tick=1, executor=ex)
+    s.ensure_blocks(b2, 8, ex)
+    assert len(s.slots[b2].blocks) == 4
+    s.check_invariants()
+
+
 def test_queue_wait_stats():
     s, ex = _sched(max_slots=1), MockExecutor()
     s.submit(_req(0, 4), tick=0)

@@ -11,10 +11,23 @@ from repro.launch import steps as S
 from repro.models import model as M
 
 
-@pytest.fixture(scope="module")
-def mesh():
+def _mesh_shapes():
+    """(data, model) layouts to test: always (1, n) — model-parallel over
+    every device, which is what serving TP uses — plus a mixed (2, n/2)
+    when the device count splits. The old fixture pinned (n, 1), which
+    made every 'model'-axis rule vacuous (size-1 axis divides anything);
+    multi-device CI now exercises real model-axis sharding here."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
+    shapes = [(1, n)]
+    if n >= 2 and n % 2 == 0:
+        shapes.append((2, n // 2))
+    return shapes
+
+
+@pytest.fixture(scope="module", params=_mesh_shapes(),
+                ids=lambda s: f"mesh{s[0]}x{s[1]}")
+def mesh(request):
+    return jax.make_mesh(request.param, ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
@@ -98,3 +111,81 @@ def test_dryrun_collective_parser():
     assert out["all-reduce"]["bytes"] == 256 * 256 * 4 * 2  # ring 2x
     assert out["reduce-scatter"]["count"] == 1
     assert out["all-to-all"]["bytes"] == 2 * 16 * 4
+
+
+# ---------------------------------------------------------------------------
+# serving preset: exact-under-sharding rules + QuantizedTensor leaves
+# ---------------------------------------------------------------------------
+
+def test_serve_rules_replicate_floats_except_embedding(mesh):
+    """RULES_SERVE_TP: float leaves replicate (float reduction order must
+    not change) — except the embedding table, whose vocab-dim gather is
+    exact under sharding."""
+    rules = MeshRules(mesh, serve=True)
+    n = mesh.shape["model"]
+    ff = jax.ShapeDtypeStruct((8, n * 4), jnp.float32)
+    sh = rules.param_shardings(("embed", "ff"), ff)
+    assert sh.spec == P()                      # float matmul weight
+    emb = jax.ShapeDtypeStruct((n * 8, 16), jnp.float32)
+    sh = rules.param_shardings(("vocab", "embed"), emb)
+    assert sh.spec == P("model", None)         # the gather table
+    from repro.distributed.sharding import RULES_SERVE_TP
+    assert RULES_SERVE_TP["ssm_inner"] is None
+    assert RULES_SERVE_TP["ssm_heads"] is None
+
+
+def test_qtensor_sharding_codes_and_scale(mesh):
+    """A quantized (int8, unpacked) weight shards its output dim over
+    'model', and the per-channel scale follows the codes' channel dim."""
+    from repro.core.fxp import FORMATS, quantize
+    from repro.core.qtensor import QuantizedTensor
+    n = mesh.shape["model"]
+    w = jnp.ones((8, n * 4), jnp.float32)
+    codes, scale = quantize(w, FORMATS["fxp8"], axis=0)
+    qt = QuantizedTensor(codes, scale, "fxp8", n * 4, packed=False)
+    rules = MeshRules(mesh, serve=True)
+    sh = rules.param_shardings(("embed", "ff"),
+                               jax.eval_shape(lambda: qt))
+    assert isinstance(sh, QuantizedTensor)
+    assert sh.data.spec == P(None, "model")
+    assert sh.scale.spec == P(None, "model")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs >=2 devices")
+def test_qtensor_packed_lane_boundary_guard():
+    """FxP4 nibble packing stores 8 logical channels per int32 word: a
+    'model' split must hand every shard whole words AND an equal slice
+    of the un-padded channel count, else the dim replicates."""
+    from repro.core.qtensor import quantize_tensor
+    mesh2 = jax.make_mesh((1, 2), ("data", "model"),
+                          devices=jax.devices()[:2],
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = MeshRules(mesh2, serve=True)
+
+    def pack(n_out):
+        return quantize_tensor(jnp.ones((8, n_out), jnp.float32), "fxp4")
+
+    ok = pack(32)          # 32 % (2 shards * 8 lanes) == 0 -> shardable
+    sh = rules.param_shardings(("embed", "ff"), jax.eval_shape(lambda: ok))
+    assert sh.data.spec == P(None, "model")
+    bad = pack(24)         # 24 % 16 != 0 -> a shard would split a word
+    sh = rules.param_shardings(("embed", "ff"), jax.eval_shape(lambda: bad))
+    assert sh.data.spec == P(None, None)
+    assert sh.scale.spec == P(None, None)
+
+
+def test_cache_shardings_paged_pool_splits_block_axis(mesh):
+    """Serve-mode cache specs put the paged pool's block axis on 'model'
+    (block gathers/scatters are exact under sharding) and keep the
+    control arrays (lengths, block tables) replicated."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    rules = MeshRules(mesh, serve=True)
+    n = mesh.shape["model"]
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, 4, 32, kv_block_size=8,
+                             kv_blocks=8 * n))
+    sh = S.cache_shardings(cfg, rules, cache, 4)
+    assert jax.tree.structure(sh) == jax.tree.structure(cache)
+    assert sh["kv"]["k"].spec[1] == "model"
+    assert sh["block_tables"].spec == P()
+    assert sh["lengths"].spec == P()
