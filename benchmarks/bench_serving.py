@@ -41,6 +41,15 @@ Five measurements:
     deterministic) and its before/after ratio is the gated
     `paged_attn_gather_bytes_reduction` metric — the repo-level analogue
     of the paper's DMA-read-elimination argument (62X/371X for VGG16).
+  * (`--engines N`) the data-parallel router — a grouped shared-prefix
+    workload through `EngineRouter` under round-robin vs prefix-affinity
+    placement at the same replica count. Both must decode bit-identical
+    tokens to a single engine (run without a quantization policy so the
+    numerics are composition-independent); the gated
+    `router_affinity_prefill_reduction` is the deterministic prefill-
+    token ratio — affinity keeps each prefix group on the replica whose
+    cache holds its blocks, round-robin cold-prefills every prefix on
+    every replica it splits the group across.
   * a BENCH_serving.json artifact for CI's perf-regression gate
     (`benchmarks/check_regression.py`): machine-portable ratios (engine
     vs static speedup, paged-vs-contiguous overhead, capacity ratio,
@@ -59,7 +68,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import PrecisionPolicy
 from repro.models import model as M
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineRouter, Request, ServingEngine
 
 SLOTS = 4
 KV_BLOCK = 8
@@ -265,6 +274,89 @@ def _tp_experiment(cfg, policy, tp):
     }
 
 
+ROUTER_GROUPS = 2
+ROUTER_GROUP_SIZE = 4
+ROUTER_PREFIX = 24          # 3 full KV blocks of per-group system prompt
+ROUTER_TAILS = (4, 6, 8, 2)
+
+
+def _router_requests(cfg):
+    """G groups x K requests: each group shares its own 3-block system
+    prompt. Submitted group-blocked so round-robin provably SPLITS every
+    group across both replicas (each replica cold-prefills each prefix)
+    while prefix-affinity keeps a group on the replica whose cache holds
+    it; interleaved submission would let round-robin's alternation
+    accidentally reproduce affinity placement."""
+    reqs = []
+    for g in range(ROUTER_GROUPS):
+        system = jax.random.randint(jax.random.PRNGKey(20 + g),
+                                    (ROUTER_PREFIX,), 0, cfg.vocab)
+        for i in range(ROUTER_GROUP_SIZE):
+            key = jax.random.fold_in(jax.random.PRNGKey(3), g * 16 + i)
+            tail = jax.random.randint(key, (ROUTER_TAILS[i],), 0, cfg.vocab)
+            reqs.append(Request(prompt=jnp.concatenate([system, tail]),
+                                max_new_tokens=6,
+                                id=g * ROUTER_GROUP_SIZE + i))
+    return reqs
+
+
+def _router_experiment(cfg, params, engines):
+    """Data-parallel router on the grouped shared-prefix workload:
+    round-robin vs prefix-affinity at the same replica count, plus a
+    single-engine reference. Runs WITHOUT a quantization policy so the
+    numerics are batch-composition independent and all three placements
+    must decode bit-identical tokens (the router invariant the tests and
+    ci_smoke gate — flexpe's per-tensor dynamic activation scales would
+    legitimately perturb low-order bits across placements). The gated
+    number is affinity's prefill-token reduction over round-robin: a
+    deterministic scheduling invariant — a replica's prefix cache only
+    helps requests routed to it, so placement that respects prefix
+    locality computes strictly fewer prefill tokens. Wall clock and
+    utilization are informational."""
+    max_len = ROUTER_PREFIX + max(ROUTER_TAILS) + 8
+
+    def drive(routing):
+        router = EngineRouter(cfg, params, engines=engines, routing=routing,
+                              max_slots=2, max_len=max_len, prefill_chunk=8,
+                              kv_block_size=KV_BLOCK, prefix_cache=True,
+                              tp=1)
+        done = router.run(_router_requests(cfg))
+        return {f.id: f.tokens for f in done}, router.stats()
+
+    eng = ServingEngine(cfg, params, max_slots=2, max_len=max_len,
+                        prefill_chunk=8, kv_block_size=KV_BLOCK,
+                        prefix_cache=True, tp=1)
+    anchor = {f.id: f.tokens for f in eng.run(_router_requests(cfg))}
+
+    drive("round-robin")                          # warm the compile caches
+    t0 = time.time()
+    rr_toks, rr = drive("round-robin")
+    dt_rr = time.time() - t0
+    t0 = time.time()
+    aff_toks, aff = drive("prefix-affinity")
+    dt_aff = time.time() - t0
+    assert rr_toks == anchor, (
+        "round-robin router decode diverged from the single engine")
+    assert aff_toks == anchor, (
+        "prefix-affinity router decode diverged from the single engine")
+    useful = aff["prompt_tokens"] + aff["generated_tokens"]
+    return {
+        "engines": engines,
+        "rr_prefill": rr["prefill_tokens_computed"],
+        "aff_prefill": aff["prefill_tokens_computed"],
+        "prefill_reduction": (rr["prefill_tokens_computed"]
+                              / max(aff["prefill_tokens_computed"], 1)),
+        "affinity_hit_rate": aff["affinity_hit_rate"],
+        "affinity_spills": aff["affinity_spills"],
+        "rr_dispatched": rr["dispatched"],
+        "aff_dispatched": aff["dispatched"],
+        "rr_util": [pe["slot_utilization"] for pe in rr["per_engine"]],
+        "aff_util": [pe["slot_utilization"] for pe in aff["per_engine"]],
+        "aff_tok_s": useful / max(dt_aff, 1e-9),
+        "speedup_vs_rr": dt_rr / max(dt_aff, 1e-9),
+    }
+
+
 def _capacity_at_budget(cfg, params, policy):
     """Peak concurrent requests under the contiguous layout's byte budget.
 
@@ -288,7 +380,7 @@ def _capacity_at_budget(cfg, params, policy):
     return peak, eng.stats()
 
 
-def run(rows, json_path=None, tp=0):
+def run(rows, json_path=None, tp=0, engines=0):
     cfg = get_config("qwen2_5_14b").reduced()
     policy = PrecisionPolicy.flexpe(8)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -314,6 +406,8 @@ def run(rows, json_path=None, tp=0):
 
     dt_sync, dt_ovl, ovl_st = _overlap_experiment(cfg, params, policy)
     tp_res = _tp_experiment(cfg, policy, tp) if tp > 1 else None
+    router_res = (_router_experiment(cfg, params, engines)
+                  if engines > 1 else None)
     peak, stc = _capacity_at_budget(cfg, params, policy)
     attn_before, attn_after = _decode_attn_traffic(cfg, policy)
     attn_reduction = attn_before / attn_after
@@ -390,6 +484,24 @@ def run(rows, json_path=None, tp=0):
         rows.append(("serving_tp_bytes", tp_res["kv_bytes_per_device"],
                      f"tp={tp_res['tp']} kv {tp_res['kv_reduction']:.2f}x "
                      f"weights {tp_res['weight_reduction']:.2f}x per device"))
+    if router_res:
+        util = "/".join(f"{u:.0%}" for u in router_res["aff_util"])
+        print(f"data-parallel router x{router_res['engines']} "
+              f"({ROUTER_GROUPS} prefix groups x {ROUTER_GROUP_SIZE}): "
+              f"prefill tokens {router_res['rr_prefill']} round-robin -> "
+              f"{router_res['aff_prefill']} prefix-affinity "
+              f"({router_res['prefill_reduction']:.2f}x fewer), affinity "
+              f"hit rate {router_res['affinity_hit_rate']:.0%} "
+              f"({router_res['affinity_spills']} spills), dispatched "
+              f"{router_res['rr_dispatched']} rr / "
+              f"{router_res['aff_dispatched']} affinity, per-replica util "
+              f"{util}, {router_res['aff_tok_s']:.1f} tok/s aggregate, "
+              f"tokens identical to the single engine (wall "
+              f"{router_res['speedup_vs_rr']:.2f}x vs rr: informational)")
+        rows.append(("serving_router_prefill", router_res["aff_prefill"],
+                     f"x{router_res['engines']} affinity "
+                     f"{router_res['prefill_reduction']:.2f}x fewer prefill "
+                     f"tokens than round-robin"))
     if json_path:
         metrics = {
             # absolute numbers (machine-dependent, reported for humans)
@@ -436,6 +548,19 @@ def run(rows, json_path=None, tp=0):
                     round(tp_res["weight_reduction"], 4),
                 "tp_speedup_vs_single": round(tp_res["speedup"], 4),
             })
+        if router_res:
+            metrics.update({
+                # the prefill reduction is a deterministic scheduling
+                # invariant (placement x prefix-cache hits) and is the
+                # gated metric; hit rate and wall numbers inform
+                "router_engines": router_res["engines"],
+                "router_affinity_prefill_reduction":
+                    round(router_res["prefill_reduction"], 4),
+                "router_affinity_hit_rate":
+                    round(router_res["affinity_hit_rate"], 4),
+                "router_affinity_speedup_vs_rr":
+                    round(router_res["speedup_vs_rr"], 4),
+            })
         with open(json_path, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -451,9 +576,14 @@ if __name__ == "__main__":
                          "degree (needs >= tp devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count first). "
                          "0 = skip, omitting the tp_* metrics")
+    ap.add_argument("--engines", type=int, default=0,
+                    help="also run the data-parallel router experiment at "
+                         "this replica count (round-robin vs "
+                         "prefix-affinity on a grouped shared-prefix "
+                         "workload). 0 = skip, omitting router_* metrics")
     args = ap.parse_args()
     rows = []
-    run(rows, json_path=args.json, tp=args.tp)
+    run(rows, json_path=args.json, tp=args.tp, engines=args.engines)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

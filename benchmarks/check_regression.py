@@ -15,7 +15,11 @@ invariants, fully deterministic — and
 `paged_attn_gather_bytes_reduction` (the analytic decode-attention
 HBM-traffic model: gathered-view-era cache bytes per tick over the
 fused paged-attention kernel's, also deterministic — it verifies the
-contiguous-view materialisation stays out of the decode hot loop).
+contiguous-view materialisation stays out of the decode hot loop), and
+`router_affinity_prefill_reduction` (prefill tokens computed under
+round-robin over prefix-affinity placement through the data-parallel
+`EngineRouter` — deterministic scheduling, it verifies affinity routing
+actually converts placement into prefix-cache hits).
 A gated metric more than `tolerance`
 below its baseline fails the job. `sample_syncs_per_token` is gated
 ABSOLUTELY (must stay < 1): the overlap-dispatch loop's whole point is
@@ -27,10 +31,12 @@ reference).
 
 After an intentional perf change, refresh the baseline with
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-        python benchmarks/bench_serving.py --tp 2 \
+        python benchmarks/bench_serving.py --tp 2 --engines 2 \
         --json benchmarks/baselines/serving.json
-(the forced device count + --tp 2 keep the tensor-parallel metrics in
-the baseline — CI gates `tp_kv_bytes_per_device_reduction`) and commit
+(the forced device count + --tp 2 + --engines 2 keep the
+tensor-parallel and router metrics in the baseline — CI gates
+`tp_kv_bytes_per_device_reduction` and
+`router_affinity_prefill_reduction`) and commit
 it alongside the change. For the wall-clock-derived ratios
 (`speedup_vs_static`, `paged_speedup_vs_static`) prefer committing a
 value somewhat BELOW a fast dev machine's measurement: the gate only
@@ -50,7 +56,13 @@ GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio",
          # deterministic shapes-x-shardings ratio (== tp when the block
          # axis splits evenly); CI runs bench_serving with --tp 2 under
          # forced host devices, so the metric is always present there
-         "tp_kv_bytes_per_device_reduction")
+         "tp_kv_bytes_per_device_reduction",
+         # data-parallel router: prefill tokens computed under round-robin
+         # over prefix-affinity placement on the grouped shared-prefix
+         # workload — a deterministic scheduling invariant (a replica's
+         # prefix cache only helps requests routed to it); CI runs
+         # bench_serving with --engines 2, so the metric is present there
+         "router_affinity_prefill_reduction")
 # metric -> exclusive ceiling, independent of the baseline file
 ABSOLUTE_CEILINGS = {"sample_syncs_per_token": 1.0}
 INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
@@ -61,7 +73,11 @@ INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
                  # speedup means nothing there; the weight ratio depends
                  # on how much of the arch is quantized, so both inform
                  "tp_weight_bytes_per_device_reduction",
-                 "tp_speedup_vs_single")
+                 "tp_speedup_vs_single",
+                 # router: hit rate depends on workload grouping and the
+                 # wall ratio on host timing — both inform, neither gates
+                 "router_affinity_hit_rate",
+                 "router_affinity_speedup_vs_rr")
 
 
 def main(argv=None) -> int:

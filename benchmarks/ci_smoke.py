@@ -20,6 +20,17 @@ the contiguous and prefix-cache workloads tensor-parallel and requires
 token equality with the tp=1 anchors — sharded serving is a pure
 performance transform, never a numerics change.
 
+`--engines N` additionally runs the shared-prefix workload through the
+data-parallel EngineRouter (N replicas, each with its own paged pool and
+prefix cache) under both the round-robin and prefix-affinity routing
+policies, and requires token equality with a single-engine anchor.
+These runs use the bf16 policy: router placement changes which requests
+are co-scheduled, and flexpe's PER-TENSOR dynamic activation scales make
+low-order bits a function of the whole co-scheduled batch (the same
+pre-existing policy-numerics property the overlap loop documented in
+PR 5) — under composition-independent numerics the router must be
+bit-exact regardless of placement, and that is what this gates.
+
 The paged runs exercise the fused paged-attention op on the decode hot
 loop (kernels/paged_attention via dispatch — reference impl under
 `--backend reference`, the block-table-walking Pallas kernel in
@@ -55,6 +66,11 @@ def main(argv=None) -> int:
                          "degree and require token equality with the tp=1 "
                          "anchor (needs >= tp devices; on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="also run the workload through the data-parallel "
+                         "EngineRouter at this replica count (round-robin "
+                         "AND prefix-affinity routing) and require token "
+                         "equality with the single-engine anchor")
     args = ap.parse_args(argv)
 
     n, slots, plen, gen, chunk, shared = WORKLOADS[args.backend]
@@ -101,7 +117,48 @@ def main(argv=None) -> int:
             f.id: f.tokens for f in serve.main(
                 paged_args + ["--prefix-cache", "--kv-blocks", str(pool)]
                 + tp)}
+    router_runs = {}
+    if args.engines > 1:
+        # data-parallel router runs on the shared-prefix workload: under
+        # composition-independent numerics (bf16 policy — flexpe's
+        # per-tensor dynamic activation scales make low-order bits a
+        # function of the co-scheduled batch, so placement would
+        # legitimately perturb them) BOTH routing policies must match a
+        # single-engine anchor token-for-token: routing is placement,
+        # never numerics. The router runs still cover the full serving
+        # stack — paged pool, prefix-cache/CoW, overlap loop — per
+        # replica on this backend.
+        bf16 = [a if a != "flexpe-fxp8" else "bf16" for a in paged_args]
+        print(f"== single-engine anchor, bf16, paged KV + prefix cache "
+              f"({args.backend}) ==")
+        router_runs["anchor"] = {
+            f.id: f.tokens for f in serve.main(bf16 + ["--prefix-cache"])}
+        egs = ["--engines", str(args.engines)]
+        affinity_finished = None
+        for routing in ("round-robin", "prefix-affinity"):
+            print(f"== router x{args.engines}, {routing}, bf16, paged KV "
+                  f"+ prefix cache ({args.backend}) ==")
+            fin = serve.main(bf16 + ["--prefix-cache", "--routing", routing]
+                             + egs)
+            router_runs[f"router-{routing}"] = {f.id: f.tokens for f in fin}
+            if routing == "prefix-affinity":
+                affinity_finished = fin
     ok = True
+    for name, toks in router_runs.items():
+        if name == "anchor":
+            continue
+        if toks != router_runs["anchor"]:
+            bad = [i for i in router_runs["anchor"]
+                   if router_runs["anchor"][i] != toks.get(i)]
+            print(f"FAIL: {name} decode diverged from the single-engine "
+                  f"bf16 anchor for request(s) {bad}", file=sys.stderr)
+            ok = False
+    if (router_runs and shared >= args.kv_block_size
+            and sum(f.prefix_hit_tokens for f in affinity_finished) <= 0):
+        print("FAIL: prefix-affinity router served zero prompt tokens from "
+              "replica prefix caches on the shared-prefix workload",
+              file=sys.stderr)
+        ok = False
     for name, toks in runs.items():
         if name == "contiguous":
             continue
@@ -122,9 +179,13 @@ def main(argv=None) -> int:
         print("FAIL: prefix cache matched zero prompt tokens on the "
               "shared-prefix workload", file=sys.stderr)
         return 1
+    router_note = ""
+    if router_runs:
+        router_note = (f", router x{args.engines} (round-robin + "
+                       f"prefix-affinity) == single-engine anchor")
     print(f"smoke OK: {len(runs['contiguous'])} requests, prefix-cache == "
-          f"paged == sync == overlap bit-exact, {reused} prompt tokens "
-          f"served from the prefix cache ({args.backend})")
+          f"paged == sync == overlap bit-exact{router_note}, {reused} "
+          f"prompt tokens served from the prefix cache ({args.backend})")
     return 0
 
 

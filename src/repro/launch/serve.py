@@ -35,6 +35,17 @@ system prompt (`--shared-prefix N` prepends one to every generated
 request) skip prefill for the matched blocks and share their physical KV.
 Decode stays bit-exact vs the unshared paged and contiguous layouts —
 `benchmarks/ci_smoke.py` gates that on every CI run, overlapped and sync.
+
+`--engines N` serves the workload data-parallel: an `EngineRouter` fans
+one admission queue out over N independent engine replicas (each with its
+own slot pool, paged pool, and prefix cache; each tp-sharded when `--tp`
+is also given). `--routing` picks the placement policy — round-robin,
+least-loaded, or prefix-affinity (chain-hash steering of shared-prefix
+requests to the replica already holding their cached blocks, bounded by
+`--stickiness`). Placement never changes tokens: every replica shares the
+seed and per-request outputs are batch-composition independent, so
+`--engines N` is token-identical to `--engines 1` — gated by
+`benchmarks/ci_smoke.py --engines 2` on both backends.
 """
 from __future__ import annotations
 
@@ -48,7 +59,8 @@ from ..configs.base import ARCH_IDS, get_config
 from ..core.backend import BACKENDS
 from ..core.qtensor import packed_bytes, quantize_params
 from ..models import model as M
-from ..serving import Request, SamplingParams, ServingEngine
+from ..serving import (EngineRouter, Request, SamplingParams, ServingEngine)
+from ..serving.router import ROUTING_POLICIES
 from ..serving.scheduler import POLICIES
 from .mesh import make_tp_mesh
 from .train import policy_from_name
@@ -141,6 +153,21 @@ def main(argv=None):
                          "and the paged KV block pool over a (1, tp) mesh "
                          "(token-identical to --tp 1; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N first)")
+    ap.add_argument("--engines", type=int, default=1,
+                    help="data-parallel replica count: an EngineRouter "
+                         "fans one admission queue out over N independent "
+                         "engines, each optionally tp-sharded (composable "
+                         "with --tp; token-identical to --engines 1)")
+    ap.add_argument("--routing", default="least-loaded",
+                    choices=list(ROUTING_POLICIES),
+                    help="router placement policy (--engines > 1): "
+                         "round-robin, least-loaded, or prefix-affinity "
+                         "(chain-hash steering of shared-prefix requests "
+                         "to the replica holding their cached blocks)")
+    ap.add_argument("--stickiness", type=int, default=None,
+                    help="prefix-affinity only: max load lead the affinity "
+                         "replica may have before a request spills to "
+                         "least-loaded (default 4)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -160,14 +187,23 @@ def main(argv=None):
             print(f"quantized weights: {qb / 2**20:.1f} MiB moved per "
                   f"full pass vs {fb / 2**20:.1f} MiB fp32 "
                   f"({fb / max(qb, 1):.1f}x reduction)")
-        engine = ServingEngine(
-            cfg, params, policy=policy, max_slots=args.slots,
+        common = dict(
+            policy=policy, max_slots=args.slots,
             max_len=args.prompt_len + args.shared_prefix + args.gen,
-            prefill_chunk=args.prefill_chunk, seed=args.seed, mesh=mesh,
+            prefill_chunk=args.prefill_chunk, seed=args.seed,
             kv_block_size=args.kv_block_size or None,
             kv_blocks=args.kv_blocks or None,
             prefix_cache=args.prefix_cache,
             scheduler=args.scheduler, overlap=args.overlap)
+        if args.engines > 1:
+            # data-parallel fleet: every replica is built tp-sharded over
+            # the same mesh geometry, so --engines and --tp compose
+            engine = EngineRouter(cfg, params, engines=args.engines,
+                                  routing=args.routing,
+                                  stickiness=args.stickiness,
+                                  tp=args.tp, **common)
+        else:
+            engine = ServingEngine(cfg, params, mesh=mesh, **common)
         reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
                              mixed=args.mixed, temp=args.temp,
                              top_k=args.top_k, seed=args.seed,
@@ -194,6 +230,21 @@ def main(argv=None):
           f"{total / dt:.1f} tok/s, slot utilization "
           f"{st['slot_utilization']:.0%} "
           f"(policy {args.policy}, backend {args.backend}, arch {cfg.name})")
+    if args.engines > 1:
+        print(f"router: {st['engines']} engines, routing "
+              f"{st['routing_policy']}, dispatched {st['dispatched']}, "
+              f"{st['prefix_tokens_reused']} prompt tokens served from "
+              f"replica prefix caches "
+              f"({st['prefill_tokens_computed']} computed)"
+              + (f", affinity hit rate {st['affinity_hit_rate']:.0%} "
+                 f"({st['affinity_spills']} spills)"
+                 if "affinity_hit_rate" in st else ""))
+        for i, pe in enumerate(st["per_engine"]):
+            print(f"  engine {i}: {pe['dispatched']} requests, queue depth "
+                  f"{pe['queue_depth']}, slot utilization "
+                  f"{pe['slot_utilization']:.0%}, prefix hit rate "
+                  f"{pe['prefix_hit_rate']:.0%}")
+        return finished
     print(f"loop: {'overlap' if args.overlap else 'sync'}, scheduler "
           f"{st['scheduler_policy']}, sample syncs/token "
           f"{st['sample_syncs_per_token']:.2f}, queue wait "

@@ -1,15 +1,19 @@
 """Continuous-batching serving subsystem: a pure-host `Scheduler`
 (admission, slot/block policy, prefix matching), a device-owning
 `ModelExecutor` (compiled steps, coalesced control mirrors, on-device
-sampled-token feedback), and a thin `ServingEngine` loop with sync and
-overlap-dispatch modes streaming `RequestOutput` events."""
+sampled-token feedback), a thin `ServingEngine` loop with sync and
+overlap-dispatch modes streaming `RequestOutput` events, and an
+`EngineRouter` fanning one admission queue out across N engine replicas
+(round-robin / least-loaded / prefix-affinity placement)."""
 from .api import FinishedRequest, Request, RequestOutput, SamplingParams
 from .engine import ServingEngine
 from .executor import ModelExecutor
 from .prefix_cache import PrefixCache
+from .router import ROUTING_POLICIES, EngineRouter, RoutingPolicy
 from .scheduler import (POLICIES, Scheduler, SchedulingPolicy,
                         ShortestPromptFirst)
 
 __all__ = ["Request", "RequestOutput", "FinishedRequest", "SamplingParams",
            "ServingEngine", "Scheduler", "SchedulingPolicy",
-           "ShortestPromptFirst", "POLICIES", "ModelExecutor", "PrefixCache"]
+           "ShortestPromptFirst", "POLICIES", "ModelExecutor", "PrefixCache",
+           "EngineRouter", "RoutingPolicy", "ROUTING_POLICIES"]

@@ -178,6 +178,20 @@ class ServingEngine:
         return self.ex.paged
 
     @property
+    def load(self) -> int:
+        """Live requests on this engine: occupied slots + its own pending
+        queue. What the router's least-loaded/affinity policies balance."""
+        return (sum(s is not None for s in self.sched.slots)
+                + len(self.sched.pending))
+
+    def prefix_peek(self, keys) -> int:
+        """How many leading chain-keyed prompt blocks this engine's prefix
+        cache already holds (0 without a cache). Read-only — the router's
+        affinity probe must not perturb LRU order or hit stats."""
+        prefix = self.sched._prefix
+        return prefix.peek(keys) if prefix is not None else 0
+
+    @property
     def cache(self):
         return self.ex.cache
 

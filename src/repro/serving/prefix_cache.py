@@ -89,6 +89,19 @@ class PrefixCache:
             self.misses += 1
         return blocks
 
+    def peek(self, keys: List[str]) -> int:
+        """Length of the longest cached prefix of `keys` WITHOUT touching
+        LRU order or hit/miss counters — a pure read. The router's
+        prefix-affinity policy uses this to ask every replica "how much
+        of this prompt do you already hold?" without the probe itself
+        perturbing any replica's eviction order or stats."""
+        depth = 0
+        for key in keys:
+            if key not in self._entries:
+                break
+            depth += 1
+        return depth
+
     def insert(self, key: str, block: int) -> bool:
         """Register `block` as the physical home of chain key `key`.
         Returns False (and caches nothing) if the key is already present —

@@ -1,0 +1,406 @@
+"""Data-parallel multi-engine router: one admission front over N engines.
+
+`EngineRouter` owns a single admission queue and fans requests out across
+N independent `ServingEngine` replicas — each with its own slot pool,
+paged block pool, and prefix cache, and each optionally tensor-parallel
+sharded (`tp`). It is the data-parallel layer of the serving stack: where
+`--tp` splits one model instance across devices, `--engines` multiplies
+whole instances and routes traffic between them, which is the scale-out
+story the ROADMAP's millions-of-users north star needs and the placement
+half of POLARON's precision/placement-as-runtime-knobs framing.
+
+Routing policy is pluggable:
+
+  * `round-robin` — classic data-parallel dispatch, replica i+1 mod N.
+    Always dispatches immediately; the fleet load-balances statistically.
+  * `least-loaded` — fewest live requests (occupied slots + replica
+    queue), ties to the lowest index. Holds requests at the router while
+    every replica is saturated, so the first freed slot anywhere takes
+    the head of the queue.
+  * `prefix-affinity` — requests whose prompt shares a chain-hashed
+    block prefix (the SAME chain hash `serving/prefix_cache.py` keys
+    physical blocks by) steer to the replica that already holds those
+    blocks: first by asking each replica's prefix cache (a read-only
+    `peek`), then by a router-side sticky map for prefixes routed but
+    not yet cached. A stickiness bound keeps one hot prefix from
+    starving the fleet: when the affinity replica's load runs more than
+    `stickiness` requests ahead of the least-loaded one, the request
+    spills to least-loaded instead (and re-sticks the prefix there).
+
+Every policy is a pure performance transform: per-request outputs are
+batch-composition independent (the long-standing engine invariant) and
+all replicas share one `seed`, so a request's tokens are bit-identical
+to running it alone on a single engine no matter which replica serves it
+or what shares the replica — `tests/test_router.py` and
+`benchmarks/ci_smoke.py --engines N` gate exactly that.
+
+The router exposes the same streaming surface as a single engine —
+`submit() / events() / stream() / abort()` — with one merged event loop
+driving every replica's tick, and `stats()` aggregates fleet totals plus
+a `per_engine` breakdown (queue depth, slot utilization, prefix hit
+rate).
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import deque
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from .api import FinishedRequest, Request, RequestOutput
+from .engine import ServingEngine
+from .prefix_cache import PrefixCache
+
+__all__ = ["EngineRouter", "RoutingPolicy", "ROUTING_POLICIES"]
+
+
+class RoutingPolicy:
+    """Pluggable placement policy: picks the replica index for the next
+    request. `holds_when_saturated` lets a policy keep the head of the
+    router queue un-dispatched while every replica is at capacity
+    (occupied slots + replica queue >= max_slots), so the first freed
+    slot anywhere serves it."""
+
+    name = "round-robin"
+    holds_when_saturated = False
+
+    def pick(self, router: "EngineRouter", request: Request,
+             loads: List[int]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(RoutingPolicy):
+    """Replica i+1 mod N per request — the classic data-parallel front.
+    Dispatches unconditionally; replicas queue internally."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def pick(self, router, request, loads):
+        i = self._next
+        self._next = (i + 1) % len(router.engines)
+        return i
+
+
+class LeastLoaded(RoutingPolicy):
+    """Fewest live requests wins, ties to the lowest replica index.
+    Holds at the router when the whole fleet is saturated."""
+
+    name = "least-loaded"
+    holds_when_saturated = True
+
+    def pick(self, router, request, loads):
+        return min(range(len(loads)), key=lambda i: (loads[i], i))
+
+
+class PrefixAffinity(RoutingPolicy):
+    """Steer shared-prefix requests to the replica already holding their
+    chain-hashed prompt blocks; fall back to least-loaded, bounded by
+    `stickiness` (max load lead the affinity replica may have before the
+    request spills — and re-sticks its prefix — elsewhere)."""
+
+    name = "prefix-affinity"
+    holds_when_saturated = True
+
+    def __init__(self, stickiness: int = 4):
+        if stickiness < 0:
+            raise ValueError("stickiness must be >= 0")
+        self.stickiness = stickiness
+        self.affinity_hits = 0       # dispatches that followed affinity
+        self.affinity_spills = 0     # affinity overridden by the bound
+
+    def pick(self, router, request, loads):
+        lo = min(range(len(loads)), key=lambda i: (loads[i], i))
+        keys = router._chain_keys(request.prompt)
+        # deepest cached match wins (ties to the lowest index); the probe
+        # is PrefixCache.peek — read-only, no LRU/stat perturbation
+        aff, depth = None, 0
+        for i, eng in enumerate(router.engines):
+            d = eng.prefix_peek(keys)
+            if d > depth:
+                aff, depth = i, d
+        if aff is None:
+            # routed-but-not-yet-cached prefixes (prefill still running,
+            # or contiguous replicas with no prefix cache at all)
+            aff = router._sticky.get(keys[0]) if keys else None
+        if aff is not None:
+            if loads[aff] - loads[lo] <= self.stickiness:
+                self.affinity_hits += 1
+                target = aff
+            else:
+                self.affinity_spills += 1
+                target = lo
+        else:
+            target = lo
+        if keys:
+            router._sticky[keys[0]] = target
+        return target
+
+
+ROUTING_POLICIES = {
+    "round-robin": RoundRobin,
+    "least-loaded": LeastLoaded,
+    "prefix-affinity": PrefixAffinity,
+}
+
+
+def make_routing_policy(policy: Union[str, RoutingPolicy],
+                        stickiness: Optional[int] = None) -> RoutingPolicy:
+    if isinstance(policy, RoutingPolicy):
+        return policy
+    if policy not in ROUTING_POLICIES:
+        raise ValueError(f"unknown routing policy {policy!r}; choose from "
+                         f"{sorted(ROUTING_POLICIES)}")
+    if policy == "prefix-affinity" and stickiness is not None:
+        return PrefixAffinity(stickiness=stickiness)
+    return ROUTING_POLICIES[policy]()
+
+
+class EngineRouter:
+    """Single admission queue fanning out over N `ServingEngine` replicas.
+
+    Usage mirrors a single engine:
+
+        router = EngineRouter(cfg, params, engines=2,
+                              routing="prefix-affinity", max_slots=4,
+                              max_len=256, kv_block_size=8,
+                              prefix_cache=True)
+        router.submit(Request(prompt=[1, 2, 3], max_new_tokens=8))
+        for out in router.events():
+            ...
+
+    Engine-construction keywords (`policy`, `max_slots`, `max_len`,
+    `prefill_chunk`, `kv_block_size`, `kv_blocks`, `prefix_cache`,
+    `scheduler`, `overlap`, `tp`, ...) apply to EVERY replica; `seed` is
+    shared deliberately — per-request RNG derives from (seed, request
+    id), so placement can never change a request's tokens. Replicas
+    share one `params` tree (and, through the executor's compiled-step
+    cache, one set of jitted steps); each replica owns its cache pool.
+    """
+
+    def __init__(self, cfg, params, *, engines: int = 2,
+                 routing: Union[str, RoutingPolicy] = "least-loaded",
+                 stickiness: Optional[int] = None, max_slots: int = 4,
+                 kv_block_size: Optional[int] = None, **engine_kw):
+        if engines < 1:
+            raise ValueError("engines must be >= 1")
+        self.routing = make_routing_policy(routing, stickiness=stickiness)
+        self.engines = [
+            ServingEngine(cfg, params, max_slots=max_slots,
+                          kv_block_size=kv_block_size, **engine_kw)
+            for _ in range(engines)]
+        self.max_slots = max_slots
+        # affinity keys reuse the replicas' chain hash exactly when the
+        # pool is paged (so peek hits real cache entries); contiguous
+        # replicas have no block size, so the sticky map keys on a fixed
+        # granularity instead
+        self._keyer = PrefixCache(kv_block_size or 16)
+        self._sticky: Dict[str, int] = {}
+        self.pending: deque = deque()        # the single admission queue
+        self._placement: Dict[int, int] = {}  # live rid -> replica index
+        self._active_ids: set = set()        # router queue + placed
+        self._next_id = 0
+        self._out_buffer: deque = deque()
+        self.tick = 0
+        self.dispatched = [0] * engines      # per-replica placements
+        self.aborted_requests = 0
+
+    # -- affinity keying -----------------------------------------------------
+
+    def _chain_keys(self, prompt) -> List[str]:
+        """Chain keys of the prompt's full blocks (the prefix-cache hash);
+        a prompt shorter than one block keys on its whole content so
+        identical short prompts still stick together."""
+        keys = self._keyer.block_keys(prompt)
+        if keys:
+            return keys
+        arr = np.asarray(prompt)
+        if arr.dtype.kind in "iu":
+            arr = arr.astype(np.int64, copy=False)
+        return [hashlib.sha1(arr.tobytes()).hexdigest()]
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        """Validate against the replica geometry (identical across the
+        fleet), assign a router-unique id, and queue. Duplicate ids are
+        rejected across the WHOLE fleet — two live requests with one id
+        would collide in the merged event stream (and share an RNG
+        stream) regardless of which replicas they landed on."""
+        self.engines[0].sched.validate(request)
+        if request.id is not None and request.id in self._active_ids:
+            raise ValueError(
+                f"request id {request.id} is already pending or in flight "
+                "on this router; ids must be unique among live requests")
+        if request.id is None:
+            request.id = self._next_id
+        self._next_id = max(self._next_id, request.id) + 1
+        self._active_ids.add(request.id)
+        self.pending.append(request)
+        return request.id
+
+    def abort(self, rid: int) -> bool:
+        """Abort wherever the request lives: still queued at the router
+        (emits the terminal event directly) or dispatched to a replica
+        (delegates — the replica's terminal event surfaces through the
+        merged loop). Returns False for unknown/finished ids."""
+        for i, req in enumerate(self.pending):
+            if req.id == rid:
+                del self.pending[i]
+                self._active_ids.discard(rid)
+                self.aborted_requests += 1
+                self._out_buffer.append(RequestOutput(
+                    id=rid, new_tokens=[], tokens=[],
+                    prompt_len=len(req.prompt), tick=self.tick,
+                    finished=True, finish_reason="aborted",
+                    prompt=req.prompt))
+                return True
+        eng_i = self._placement.get(rid)
+        if eng_i is None:
+            return False
+        if self.engines[eng_i].abort(rid):
+            # the replica counts this abort in its own stats (summed by
+            # `stats()`), so the router-level counter must not also
+            self._placement.pop(rid, None)
+            self._active_ids.discard(rid)
+            return True
+        return False
+
+    def has_work(self) -> bool:
+        return (bool(self.pending) or bool(self._out_buffer)
+                or any(e.has_work() for e in self.engines))
+
+    # -- the merged tick loop ------------------------------------------------
+
+    def _dispatch(self):
+        """Drain the admission queue through the routing policy. FIFO and
+        no-skip — the queue's head is placed (or held) before anything
+        behind it, so router-level ordering matches a single engine's."""
+        while self.pending:
+            loads = [e.load for e in self.engines]
+            if (self.routing.holds_when_saturated
+                    and min(loads) >= self.max_slots):
+                break        # whole fleet saturated: hold at the router
+            req = self.pending.popleft()
+            target = self.routing.pick(self, req, loads)
+            self.engines[target].submit(req)
+            self._placement[req.id] = target
+            self.dispatched[target] += 1
+
+    def step(self) -> List[RequestOutput]:
+        """One router tick: route queued requests, then drive every
+        replica's engine tick, returning the merged event stream (plus
+        anything buffered, e.g. a router-level abort's terminal event)."""
+        events: List[RequestOutput] = list(self._out_buffer)
+        self._out_buffer.clear()
+        self._dispatch()
+        for eng in self.engines:
+            if eng.has_work():
+                events.extend(eng.step())
+        for out in events:
+            if out.finished:
+                self._placement.pop(out.id, None)
+                self._active_ids.discard(out.id)
+        self.tick += 1
+        return events
+
+    # -- output streams (same shape as ServingEngine's) ----------------------
+
+    def events(self):
+        """Merged generator over the fleet: run router ticks until idle,
+        yielding every replica's `RequestOutput` events as they drain."""
+        while self.has_work():
+            yield from self.step()
+
+    def stream(self, request: Request):
+        """Submit `request` and yield ITS events; other requests' events
+        re-buffer for `events()` consumers, exactly like the
+        single-engine `stream()`."""
+        rid = self.submit(request)
+        while self.has_work():
+            outs = self.step()
+            mine = [o for o in outs if o.id == rid]
+            self._out_buffer.extend(o for o in outs if o.id != rid)
+            for out in mine:
+                yield out
+                if out.finished:
+                    return
+            if not mine and not (self.pending
+                                 or any(e.has_work() for e in self.engines)):
+                return
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> List[FinishedRequest]:
+        """Completion-only view, mirroring `ServingEngine.run()`."""
+        for r in requests or ():
+            self.submit(r)
+        done = [out.to_finished() for out in self.events() if out.finished]
+        return sorted(done, key=lambda f: f.id)
+
+    # -- introspection -------------------------------------------------------
+
+    def check_invariants(self):
+        """Fleet-wide consistency: every replica's block ledger audits
+        clean, and the router's id bookkeeping matches what it actually
+        holds (queued ids + placed ids == active ids, no placement entry
+        without a live id)."""
+        for eng in self.engines:
+            eng.check_invariants()
+        queued = {r.id for r in self.pending}
+        assert queued | set(self._placement) == self._active_ids, (
+            f"router id drift: queued {sorted(queued)} + placed "
+            f"{sorted(self._placement)} != active "
+            f"{sorted(self._active_ids)}")
+        assert not (queued & set(self._placement)), (
+            "a request is both queued at the router and placed on a "
+            f"replica: {sorted(queued & set(self._placement))}")
+        for rid, i in self._placement.items():
+            assert 0 <= i < len(self.engines), (rid, i)
+
+    def stats(self) -> dict:
+        """Fleet totals plus a `per_engine` breakdown. Aggregates sum the
+        token/tick counters; `slot_utilization` is the fleet mean
+        weighted by each replica's slot-ticks; `prefix_hit_rate` is
+        prompt tokens served from a replica's prefix cache over prompt
+        tokens it processed."""
+        per = [e.stats() for e in self.engines]
+        busy = sum(e.busy_slot_ticks for e in self.engines)
+        total = sum(e.total_slot_ticks for e in self.engines)
+        st = {
+            "engines": len(self.engines),
+            "routing_policy": self.routing.name,
+            "ticks": self.tick,
+            "pending_requests": len(self.pending),
+            "dispatched": list(self.dispatched),
+            "aborted_requests": (self.aborted_requests
+                                 + sum(s["aborted_requests"] for s in per)),
+            "prompt_tokens": sum(s["prompt_tokens"] for s in per),
+            "generated_tokens": sum(s["generated_tokens"] for s in per),
+            "prefill_tokens_computed": sum(s["prefill_tokens_computed"]
+                                           for s in per),
+            "prefix_tokens_reused": sum(s["prefix_tokens_reused"]
+                                        for s in per),
+            "slot_utilization": busy / max(total, 1),
+        }
+        if isinstance(self.routing, PrefixAffinity):
+            routed = self.routing.affinity_hits + self.routing.affinity_spills
+            st["affinity_hits"] = self.routing.affinity_hits
+            st["affinity_spills"] = self.routing.affinity_spills
+            st["affinity_hit_rate"] = (self.routing.affinity_hits
+                                       / max(sum(self.dispatched), 1))
+            st["affinity_spill_rate"] = (self.routing.affinity_spills
+                                         / max(routed, 1))
+        st["per_engine"] = [{
+            "queue_depth": s["pending_requests"],
+            "slot_utilization": s["slot_utilization"],
+            "prompt_tokens": s["prompt_tokens"],
+            "generated_tokens": s["generated_tokens"],
+            "prefill_tokens_computed": s["prefill_tokens_computed"],
+            "prefix_hit_rate": (s["prefix_tokens_reused"]
+                                / max(s["prompt_tokens"], 1)),
+            "dispatched": self.dispatched[i],
+        } for i, s in enumerate(per)]
+        return st

@@ -158,10 +158,11 @@ class Scheduler:
         bs = self.kv_block_size
         return -(-(len(request.prompt) + request.max_new_tokens) // bs)
 
-    def submit(self, request: Request, tick: int) -> int:
-        """Validate and enqueue. Every check runs before any state
-        mutates, so a rejected request can't leak an id, a queue entry,
-        or a `_submitted` timestamp."""
+    def validate(self, request: Request):
+        """Raise ValueError if `request` can never be served by this
+        scheduler's geometry. Pure — no state mutates, so an external
+        admission front (the multi-engine router) can pre-validate
+        against any replica before deciding placement."""
         plen = len(request.prompt)
         if plen < 1:
             raise ValueError("empty prompt: a request needs at least one "
@@ -176,6 +177,12 @@ class Scheduler:
             raise ValueError(
                 f"request needs {self.blocks_need(request)} KV blocks but "
                 f"the pool only has {self.num_blocks}")
+
+    def submit(self, request: Request, tick: int) -> int:
+        """Validate and enqueue. Every check runs before any state
+        mutates, so a rejected request can't leak an id, a queue entry,
+        or a `_submitted` timestamp."""
+        self.validate(request)
         if request.id is not None and request.id in self._active_ids:
             # two live requests with one id would share a fold_in RNG
             # stream and collide in the event stream
