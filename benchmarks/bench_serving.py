@@ -50,6 +50,19 @@ Five measurements:
     token ratio — affinity keeps each prefix group on the replica whose
     cache holds its blocks, round-robin cold-prefills every prefix on
     every replica it splits the group across.
+  * (`--tiers t1,t2`) the precision-tiered fleet — the same mixed
+    workload through the heterogeneous tiered router twice: every
+    request pinned to the best (most accurate) tier vs every request
+    left priority-0 so queue pressure degrades the overflow to cheaper
+    replicas. Both runs are deterministic schedules; the gated
+    `tier_degrade_throughput_gain` is the engine-tick ratio (pinned
+    ticks / degraded ticks) — pressure degradation must measurably
+    raise fleet throughput by activating the cheap replicas, the
+    paper's runtime precision-reconfigurability payoff at serving
+    scale. The pinned run must stay token-identical to a single-engine
+    anchor at that tier, and the per-tier CORDIC accuracy proxy
+    (sigmoid MAE at each tier's Pareto stage pick) is reported
+    informationally.
   * a BENCH_serving.json artifact for CI's perf-regression gate
     (`benchmarks/check_regression.py`): machine-portable ratios (engine
     vs static speedup, paged-vs-contiguous overhead, capacity ratio,
@@ -357,6 +370,77 @@ def _router_experiment(cfg, params, engines):
     }
 
 
+def _tier_experiment(cfg, params, tiers):
+    """Precision-tiered fleet on the mixed workload: all-pinned-to-best
+    vs pressure-degraded placement over the same heterogeneous router.
+
+    Both schedules are deterministic (no wall clock anywhere in the
+    gate): pinning every request to the best tier serializes the fleet
+    behind that tier's replica while degradation spreads the overflow
+    across the cheap replicas, so the engine-tick ratio measures exactly
+    what the tier ladder buys. Token identity of the pinned run against
+    a single-engine anchor at the best tier re-asserts the hard pin
+    contract here too (identical stream -> identical composition ->
+    identical dynamic scales, even for flexpe tiers)."""
+    from repro.core import TieredWeights
+    from repro.core.pareto import af_error
+    from repro.core.precision import tier_policy
+    from repro.core.tiers import TIERS, tier_index
+
+    order = sorted(dict.fromkeys(tiers), key=tier_index)
+    best = order[-1]
+    bank = TieredWeights(params, order)
+
+    def drive(pin):
+        router = EngineRouter(cfg, bank, tiers=order, routing="tiered",
+                              max_slots=2, max_len=MAX_LEN,
+                              prefill_chunk=PREFILL_CHUNK,
+                              kv_block_size=KV_BLOCK, tp=1)
+        reqs = _requests(cfg)
+        for r in reqs:
+            r.tier = pin
+        done = router.run(reqs)
+        return {f.id: f.tokens for f in done}, router.stats()
+
+    anchor_eng = ServingEngine(cfg, bank.for_tier(best),
+                               policy=tier_policy(best), max_slots=2,
+                               max_len=MAX_LEN, prefill_chunk=PREFILL_CHUNK,
+                               kv_block_size=KV_BLOCK, tp=1)
+    anchor = {f.id: f.tokens for f in anchor_eng.run(_requests(cfg))}
+
+    drive(best)                                   # warm the compile caches
+    t0 = time.time()
+    pin_toks, pin_st = drive(best)
+    dt_pin = time.time() - t0
+    t0 = time.time()
+    _, deg_st = drive(None)
+    dt_deg = time.time() - t0
+    assert pin_toks == anchor, (
+        f"tiered router pinned to {best} diverged from the single-engine "
+        f"{best} anchor")
+    assert pin_st["tier_degraded"] == 0, (
+        "pinned requests must never count as degraded")
+    # accuracy proxy: CORDIC sigmoid MAE at each quantized tier's Pareto
+    # stage pick (deterministic MC protocol, seed 0) — the cost side of
+    # the throughput gain, reported informationally per tier
+    mae = {}
+    for t in order:
+        tier = TIERS[t]
+        if tier.quantized:
+            mae[t] = af_error("sigmoid", tier.bits, tier.hr_stages,
+                              tier.lv_stages).mae
+    return {
+        "tiers": order,
+        "pinned_ticks": pin_st["ticks"],
+        "degraded_ticks": deg_st["ticks"],
+        "throughput_gain": pin_st["ticks"] / max(deg_st["ticks"], 1),
+        "degraded_requests": deg_st["tier_degraded"],
+        "placed": deg_st["tier_placed"],
+        "mae": mae,
+        "wall_gain": dt_pin / max(dt_deg, 1e-9),
+    }
+
+
 def _capacity_at_budget(cfg, params, policy):
     """Peak concurrent requests under the contiguous layout's byte budget.
 
@@ -380,7 +464,7 @@ def _capacity_at_budget(cfg, params, policy):
     return peak, eng.stats()
 
 
-def run(rows, json_path=None, tp=0, engines=0):
+def run(rows, json_path=None, tp=0, engines=0, tiers=""):
     cfg = get_config("qwen2_5_14b").reduced()
     policy = PrecisionPolicy.flexpe(8)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -408,6 +492,9 @@ def run(rows, json_path=None, tp=0, engines=0):
     tp_res = _tp_experiment(cfg, policy, tp) if tp > 1 else None
     router_res = (_router_experiment(cfg, params, engines)
                   if engines > 1 else None)
+    tier_list = [t for t in tiers.split(",") if t]
+    tier_res = (_tier_experiment(cfg, params, tier_list)
+                if len(tier_list) > 1 else None)
     peak, stc = _capacity_at_budget(cfg, params, policy)
     attn_before, attn_after = _decode_attn_traffic(cfg, policy)
     attn_reduction = attn_before / attn_after
@@ -502,6 +589,23 @@ def run(rows, json_path=None, tp=0, engines=0):
                      f"x{router_res['engines']} affinity "
                      f"{router_res['prefill_reduction']:.2f}x fewer prefill "
                      f"tokens than round-robin"))
+    if tier_res:
+        placed = ", ".join(f"{t}: {n}"
+                           for t, n in tier_res["placed"].items())
+        mae = ", ".join(f"{t} {m:.4f}" for t, m in tier_res["mae"].items())
+        print(f"precision-tiered fleet ({','.join(tier_res['tiers'])}): "
+              f"{tier_res['pinned_ticks']} ticks all-pinned-to-"
+              f"{tier_res['tiers'][-1]} -> {tier_res['degraded_ticks']} "
+              f"ticks with pressure degradation "
+              f"({tier_res['throughput_gain']:.2f}x fewer), "
+              f"{tier_res['degraded_requests']} requests degraded, placed "
+              f"{{{placed}}}, pinned run token-identical to the "
+              f"single-engine anchor; CORDIC sigmoid MAE {mae} "
+              f"(wall {tier_res['wall_gain']:.2f}x: informational)")
+        rows.append(("serving_tier_ticks", tier_res["degraded_ticks"],
+                     f"{tier_res['throughput_gain']:.2f}x fewer fleet "
+                     f"ticks via pressure degradation "
+                     f"({tier_res['degraded_requests']} degraded)"))
     if json_path:
         metrics = {
             # absolute numbers (machine-dependent, reported for humans)
@@ -561,6 +665,21 @@ def run(rows, json_path=None, tp=0, engines=0):
                 "router_affinity_speedup_vs_rr":
                     round(router_res["speedup_vs_rr"], 4),
             })
+        if tier_res:
+            metrics.update({
+                # the tick ratio is a deterministic scheduling invariant
+                # (pinning serializes behind one replica; degradation
+                # activates the cheap tiers) and is the gated metric; the
+                # per-tier CORDIC MAE proxies the accuracy cost of
+                # degradation and informs, as does the wall ratio
+                "tier_ladder": ",".join(tier_res["tiers"]),
+                "tier_degrade_throughput_gain":
+                    round(tier_res["throughput_gain"], 4),
+                "tier_degraded_requests": tier_res["degraded_requests"],
+            })
+            metrics.update({
+                f"tier_accuracy_mae_{t}": round(m, 5)
+                for t, m in tier_res["mae"].items()})
         with open(json_path, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -581,9 +700,16 @@ if __name__ == "__main__":
                          "this replica count (round-robin vs "
                          "prefix-affinity on a grouped shared-prefix "
                          "workload). 0 = skip, omitting router_* metrics")
+    ap.add_argument("--tiers", default="",
+                    help="comma-separated ladder tiers: also run the "
+                         "precision-tiered fleet experiment (all-pinned "
+                         "vs pressure-degraded placement over a "
+                         "heterogeneous router). '' = skip, omitting "
+                         "tier_* metrics")
     args = ap.parse_args()
     rows = []
-    run(rows, json_path=args.json, tp=args.tp, engines=args.engines)
+    run(rows, json_path=args.json, tp=args.tp, engines=args.engines,
+        tiers=args.tiers)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -19,7 +19,12 @@ contiguous-view materialisation stays out of the decode hot loop), and
 `router_affinity_prefill_reduction` (prefill tokens computed under
 round-robin over prefix-affinity placement through the data-parallel
 `EngineRouter` — deterministic scheduling, it verifies affinity routing
-actually converts placement into prefix-cache hits).
+actually converts placement into prefix-cache hits), and
+`tier_degrade_throughput_gain` (fleet engine-ticks all-pinned-to-best
+over ticks with pressure degradation enabled on the precision-tiered
+router — deterministic scheduling, it verifies tier degradation
+actually activates the cheap replicas instead of queueing behind the
+accurate one).
 A gated metric more than `tolerance`
 below its baseline fails the job. `sample_syncs_per_token` is gated
 ABSOLUTELY (must stay < 1): the overlap-dispatch loop's whole point is
@@ -32,11 +37,12 @@ reference).
 After an intentional perf change, refresh the baseline with
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python benchmarks/bench_serving.py --tp 2 --engines 2 \
-        --json benchmarks/baselines/serving.json
-(the forced device count + --tp 2 + --engines 2 keep the
-tensor-parallel and router metrics in the baseline — CI gates
-`tp_kv_bytes_per_device_reduction` and
-`router_affinity_prefill_reduction`) and commit
+        --tiers fxp4,fxp8 --json benchmarks/baselines/serving.json
+(the forced device count + --tp 2 + --engines 2 + --tiers keep the
+tensor-parallel, router, and precision-tier metrics in the baseline —
+CI gates `tp_kv_bytes_per_device_reduction`,
+`router_affinity_prefill_reduction`, and
+`tier_degrade_throughput_gain`) and commit
 it alongside the change. For the wall-clock-derived ratios
 (`speedup_vs_static`, `paged_speedup_vs_static`) prefer committing a
 value somewhat BELOW a fast dev machine's measurement: the gate only
@@ -62,7 +68,13 @@ GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio",
          # workload — a deterministic scheduling invariant (a replica's
          # prefix cache only helps requests routed to it); CI runs
          # bench_serving with --engines 2, so the metric is present there
-         "router_affinity_prefill_reduction")
+         "router_affinity_prefill_reduction",
+         # precision-tiered router: fleet ticks all-pinned-to-best over
+         # ticks with pressure degradation — a deterministic scheduling
+         # invariant (degradation spreads overflow onto the cheap
+         # replicas); CI runs bench_serving with --tiers fxp4,fxp8, so
+         # the metric is always present there
+         "tier_degrade_throughput_gain")
 # metric -> exclusive ceiling, independent of the baseline file
 ABSOLUTE_CEILINGS = {"sample_syncs_per_token": 1.0}
 INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
@@ -77,7 +89,15 @@ INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
                  # router: hit rate depends on workload grouping and the
                  # wall ratio on host timing — both inform, neither gates
                  "router_affinity_hit_rate",
-                 "router_affinity_speedup_vs_rr")
+                 "router_affinity_speedup_vs_rr",
+                 # tiered fleet: degraded-request count depends on the
+                 # workload mix; the per-tier CORDIC sigmoid MAE proxies
+                 # the accuracy cost of degradation (ladder-validated in
+                 # tests/test_precision_tiers.py) — all inform
+                 "tier_degraded_requests",
+                 "tier_accuracy_mae_fxp4",
+                 "tier_accuracy_mae_fxp8",
+                 "tier_accuracy_mae_fxp16")
 
 
 def main(argv=None) -> int:
@@ -126,8 +146,10 @@ def main(argv=None) -> int:
                             "blocking on sample syncs again")
     for key in INFORMATIONAL:
         if not args.gate_absolute and key in cur:
-            ref = f" (baseline {base[key]:.1f})" if key in base else ""
-            print(f"  [info] {key}: {cur[key]:.1f}{ref}")
+            # .4g keeps MAE-scale values (~0.02) readable without
+            # drowning tok/s-scale ones in digits
+            ref = f" (baseline {base[key]:.4g})" if key in base else ""
+            print(f"  [info] {key}: {cur[key]:.4g}{ref}")
 
     if failures:
         print("\nperf regression gate FAILED:", file=sys.stderr)

@@ -31,6 +31,16 @@ pre-existing policy-numerics property the overlap loop documented in
 PR 5) — under composition-independent numerics the router must be
 bit-exact regardless of placement, and that is what this gates.
 
+`--tiers t1,t2` additionally runs the heterogeneous precision fleet:
+for EACH listed tier, a tiered-router run with every request pinned to
+that tier must be token-identical to a single-engine anchor serving the
+same-policy engine ("bf16" or "flexpe-<tier>"). Pinning makes this
+exact even under flexpe's composition-dependent activation scales: the
+pinned replica receives the identical request stream in the identical
+order as the anchor engine, so batch composition — and therefore every
+dynamic scale — matches tick for tick. A tier pin is a hard numerics
+contract and this is the gate that enforces it.
+
 The paged runs exercise the fused paged-attention op on the decode hot
 loop (kernels/paged_attention via dispatch — reference impl under
 `--backend reference`, the block-table-walking Pallas kernel in
@@ -71,6 +81,11 @@ def main(argv=None) -> int:
                          "EngineRouter at this replica count (round-robin "
                          "AND prefix-affinity routing) and require token "
                          "equality with the single-engine anchor")
+    ap.add_argument("--tiers", default="",
+                    help="comma-separated ladder tiers: also run the "
+                         "heterogeneous tiered router with every request "
+                         "pinned to each tier in turn and require token "
+                         "equality with a same-policy single-engine anchor")
     args = ap.parse_args(argv)
 
     n, slots, plen, gen, chunk, shared = WORKLOADS[args.backend]
@@ -143,7 +158,43 @@ def main(argv=None) -> int:
             router_runs[f"router-{routing}"] = {f.id: f.tokens for f in fin}
             if routing == "prefix-affinity":
                 affinity_finished = fin
+    tier_runs = {}
+    tiers = [t for t in args.tiers.split(",") if t]
+    if tiers:
+        # heterogeneous-fleet runs: all-pinned workloads make placement
+        # deterministic (one replica serves the whole stream in anchor
+        # order), so token identity holds bit-exactly even for flexpe
+        # tiers with composition-dependent activation scales
+        for t in tiers:
+            pol = "bf16" if t == "bf16" else f"flexpe-{t}"
+            anchor_args = [a if a != "flexpe-fxp8" else pol
+                           for a in paged_args]
+            print(f"== single-engine anchor, {pol}, paged KV + prefix "
+                  f"cache ({args.backend}) ==")
+            tier_runs[f"anchor-{t}"] = {
+                f.id: f.tokens
+                for f in serve.main(anchor_args + ["--prefix-cache"])}
+            print(f"== tiered router {args.tiers}, all pinned to {t} "
+                  f"({args.backend}) ==")
+            fin = serve.main(
+                paged_args + ["--prefix-cache", "--tiers", args.tiers,
+                              "--routing", "tiered", "--pin-tier", t])
+            tier_runs[f"tiered-pin-{t}"] = {f.id: f.tokens for f in fin}
+            served_at = {f.tier for f in fin}
+            if served_at != {t}:
+                print(f"FAIL: requests pinned to {t!r} were served at "
+                      f"{sorted(served_at)}", file=sys.stderr)
+                return 1
     ok = True
+    for t in tiers:
+        if tier_runs[f"tiered-pin-{t}"] != tier_runs[f"anchor-{t}"]:
+            anchor = tier_runs[f"anchor-{t}"]
+            bad = [i for i in anchor
+                   if anchor[i] != tier_runs[f"tiered-pin-{t}"].get(i)]
+            print(f"FAIL: tiered router pinned to {t} diverged from the "
+                  f"single-engine {t} anchor for request(s) {bad}",
+                  file=sys.stderr)
+            ok = False
     for name, toks in router_runs.items():
         if name == "anchor":
             continue
@@ -183,6 +234,9 @@ def main(argv=None) -> int:
     if router_runs:
         router_note = (f", router x{args.engines} (round-robin + "
                        f"prefix-affinity) == single-engine anchor")
+    if tiers:
+        router_note += (f", tiered fleet ({args.tiers}) pinned runs == "
+                        f"per-tier anchors")
     print(f"smoke OK: {len(runs['contiguous'])} requests, prefix-cache == "
           f"paged == sync == overlap bit-exact{router_note}, {reused} "
           f"prompt tokens served from the prefix cache ({args.backend})")

@@ -9,14 +9,19 @@ from .cordic import PARETO_STAGES
 from .flexpe import FlexPE, FlexPEArray
 from .fxp import (FORMATS, FXP4, FXP8, FXP16, FXP32, FxPFormat, dequantize,
                   fake_quant, fake_quant_ste, quantize)
-from .precision import PrecisionPolicy, qeinsum, qmatmul
-from .qtensor import QuantizedTensor, dequantize_params, quantize_params
+from .precision import (PrecisionPolicy, policy_tier, qeinsum, qmatmul,
+                        tier_policy)
+from .qtensor import (QuantizedTensor, TieredWeights, dequantize_params,
+                      quantize_params)
 from .simd import pack, packed_len, unpack
+from .tiers import TIER_LADDER, TIERS, PrecisionTier, tier_index
 
 __all__ = [
     "AF_NAMES", "flex_af", "BACKENDS", "backend", "PARETO_STAGES", "FlexPE",  # noqa: F822 — `backend` is the submodule
     "FlexPEArray", "FORMATS", "FXP4", "FXP8", "FXP16", "FXP32", "FxPFormat",
     "dequantize", "fake_quant", "fake_quant_ste", "quantize",
     "PrecisionPolicy", "qeinsum", "qmatmul", "QuantizedTensor",
-    "dequantize_params", "quantize_params", "pack", "packed_len", "unpack",
+    "TieredWeights", "dequantize_params", "quantize_params", "pack",
+    "packed_len", "unpack", "PrecisionTier", "TIERS", "TIER_LADDER",
+    "tier_index", "tier_policy", "policy_tier",
 ]

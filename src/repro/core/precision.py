@@ -36,8 +36,14 @@ from .backend import resolve as _resolve_backend
 from .activation import flex_af
 from .fxp import fake_quant_ste
 from .qtensor import QuantizedTensor
+# the serving-tier ladder lives in the jax-free `tiers` module (the
+# pure-host Scheduler validates tier names without importing jax);
+# re-exported here because precision.py owns the tier -> policy mapping
+from .tiers import TIER_LADDER, TIERS, PrecisionTier, tier_index
 
-__all__ = ["PrecisionPolicy", "qmatmul", "qeinsum"]
+__all__ = ["PrecisionPolicy", "qmatmul", "qeinsum", "PrecisionTier",
+           "TIERS", "TIER_LADDER", "tier_index", "tier_policy",
+           "policy_tier"]
 
 
 def _dispatch():
@@ -132,6 +138,31 @@ class PrecisionPolicy:
         lv = softmax_lv_stages(x.shape[axis], self.af)
         return flex_af(x, "softmax", precision=self.af, impl="cordic",
                        stages=(hr, lv), axis=axis)
+
+
+def tier_policy(tier: str, backend: str = "reference",
+                af_impl: str = "cordic") -> PrecisionPolicy:
+    """The `PrecisionPolicy` a replica pinned to ladder tier `tier` runs.
+
+    FxP tiers map to the paper-faithful `flexpe(bits)` mode (quantized
+    matmuls + CORDIC AFs at the tier's Pareto stage pick — `flexpe`
+    reads the same `PARETO_STAGES` table the ladder mirrors); 'bf16' is
+    the native-precision policy. Unknown names raise the ladder's
+    ValueError."""
+    t = TIER_LADDER[tier_index(tier)]
+    if t.bits is None:
+        return PrecisionPolicy.bf16().with_backend(backend)
+    return PrecisionPolicy.flexpe(t.bits, af_impl=af_impl, backend=backend)
+
+
+def policy_tier(policy: Optional["PrecisionPolicy"]) -> Optional[str]:
+    """Ladder tier a policy serves at: its matmul format name when that
+    is a rung ('fxp4'/'fxp8'/'fxp16'), 'bf16' for native-precision
+    policies (matmul None), None for off-ladder formats (e.g. fxp12) —
+    such an engine serves untiered and rejects tier-pinned requests."""
+    if policy is None or policy.matmul is None:
+        return "bf16"
+    return policy.matmul if policy.matmul in TIERS else None
 
 
 def _maybe_q(x: jax.Array, fmt_name: Optional[str]) -> jax.Array:

@@ -31,9 +31,11 @@ import jax.numpy as jnp
 
 from .fxp import FORMATS, FxPFormat, code_dtype, quantize
 from .simd import pack, unpack
+from .tiers import TIERS, tier_index
 
-__all__ = ["QuantizedTensor", "quantize_tensor", "quantize_params",
-           "dequantize_params", "packed_bytes", "QUANT_PARAM_KEYS"]
+__all__ = ["QuantizedTensor", "TieredWeights", "quantize_tensor",
+           "quantize_params", "dequantize_params", "map_weight_leaves",
+           "packed_bytes", "QUANT_PARAM_KEYS"]
 
 #: Param-tree dict keys that hold matmul weights (consumed by `qmatmul`).
 #: Embeddings (gather), norm weights, and biases stay float.
@@ -113,8 +115,13 @@ class QuantizedTensor:
 
 
 def quantize_tensor(w: jax.Array, fmt_name: str, packed: Optional[bool] = None,
-                    per_channel: bool = True) -> QuantizedTensor:
-    """Quantize a float weight [.., K, N] once, for serving-time reuse."""
+                    per_channel: bool = True,
+                    scale: Optional[jax.Array] = None) -> QuantizedTensor:
+    """Quantize a float weight [.., K, N] once, for serving-time reuse.
+
+    `scale` overrides the dynamic per-channel scale — `TieredWeights`
+    passes one derived from a shared amax so every tier's codes come off
+    the identical grid `quantize_params` would have picked."""
     fmt = FORMATS[fmt_name]
     if packed is None:
         packed = fmt.bits == 4
@@ -122,7 +129,7 @@ def quantize_tensor(w: jax.Array, fmt_name: str, packed: Optional[bool] = None,
         raise ValueError("lane-packed storage is FxP4-only "
                          f"(got {fmt_name})")
     axis = -2 if per_channel else (-2, -1)
-    codes, scale = quantize(w, fmt, axis=axis)
+    codes, scale = quantize(w, fmt, scale=scale, axis=axis)
     n = w.shape[-1]
     if packed:
         lanes = fmt.lanes_per_word  # 8 nibbles / int32 word
@@ -145,10 +152,9 @@ def _is_weight_leaf(v: Any) -> bool:
             and jnp.issubdtype(v.dtype, jnp.floating))
 
 
-def quantize_params(params: Any, fmt_name: str, packed: Optional[bool] = None,
-                    per_channel: bool = True,
-                    keys: frozenset = QUANT_PARAM_KEYS) -> Any:
-    """Model surgery: replace matmul-weight leaves with QuantizedTensor.
+def map_weight_leaves(params: Any, fn,
+                      keys: frozenset = QUANT_PARAM_KEYS) -> Any:
+    """Rebuild `params` with `fn` applied to every matmul-weight leaf.
 
     Walks nested dicts by key name; only float leaves with ndim >= 2 under a
     key in `keys` are converted (biases under e.g. 'bq' and 1-D norm scales
@@ -156,19 +162,106 @@ def quantize_params(params: Any, fmt_name: str, packed: Optional[bool] = None,
     """
     def walk(node):
         if isinstance(node, dict):
-            out = {}
-            for k, v in node.items():
-                if k in keys and _is_weight_leaf(v):
-                    out[k] = quantize_tensor(v, fmt_name, packed=packed,
-                                             per_channel=per_channel)
-                else:
-                    out[k] = walk(v)
-            return out
+            return {k: fn(v) if k in keys and _is_weight_leaf(v) else walk(v)
+                    for k, v in node.items()}
         if isinstance(node, (list, tuple)):
             return type(node)(walk(v) for v in node)
         return node
 
     return walk(params)
+
+
+def quantize_params(params: Any, fmt_name: str, packed: Optional[bool] = None,
+                    per_channel: bool = True,
+                    keys: frozenset = QUANT_PARAM_KEYS) -> Any:
+    """Model surgery: replace matmul-weight leaves with QuantizedTensor
+    (see `map_weight_leaves` for which leaves convert)."""
+    return map_weight_leaves(
+        params, lambda w: quantize_tensor(w, fmt_name, packed=packed,
+                                          per_channel=per_channel),
+        keys=keys)
+
+
+class TieredWeights:
+    """Quantize-once weight banks for EVERY serving tier of one model.
+
+    One float source-of-truth tree plus, per quantized ladder tier, a
+    `quantize_params`-shaped view whose matmul weights are
+    `QuantizedTensor` codes at that tier's bit width. The per-leaf
+    dynamic-range reduction (`amax` over input channels — the expensive
+    scan of the float weight) runs ONCE and is shared: each tier's scale
+    is `amax / qmax(tier)`, exactly what `quantize_params` computes per
+    tier, so `for_tier(t)` is bitwise identical to independent surgery —
+    a replica serving from a TieredWeights view decodes the same tokens
+    as one quantized standalone. The 'bf16' tier serves the float source
+    directly (no copy).
+
+    Memory model: resident bytes = the float source + one code bank per
+    quantized tier (FxP4 nibble-packed, FxP8 int8, FxP16 int16) + a
+    shared-magnitude f32 scale per bank — `bytes_by_tier()` itemises it.
+    This is the paper's SIMD storage story fleet-wide: a heterogeneous
+    fleet serves N precision tiers from one weight load, not N model
+    copies."""
+
+    def __init__(self, params: Any, tiers, per_channel: bool = True,
+                 keys: frozenset = QUANT_PARAM_KEYS):
+        names = []
+        for t in tiers:
+            tier_index(t)                      # unknown tier -> ValueError
+            if t not in names:
+                names.append(t)
+        if not names:
+            raise ValueError("TieredWeights needs at least one tier")
+        self.tier_names = tuple(names)
+        self.source = params
+        axis = -2 if per_channel else (-2, -1)
+        amax_memo: dict = {}                   # id(leaf) -> shared amax
+
+        def shared_amax(w):
+            if id(w) not in amax_memo:
+                amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+                amax_memo[id(w)] = jnp.maximum(amax.astype(jnp.float32),
+                                               1e-12)
+            return amax_memo[id(w)]
+
+        self._views = {}
+        for t in names:
+            bits = TIERS[t].bits
+            if bits is None:
+                self._views[t] = params
+                continue
+            fmt = FORMATS[t]
+            self._views[t] = map_weight_leaves(
+                params, lambda w, _fmt=fmt, _t=t: quantize_tensor(
+                    w, _t, per_channel=per_channel,
+                    scale=shared_amax(w) / _fmt.qmax),
+                keys=keys)
+
+    def __contains__(self, tier: str) -> bool:
+        return tier in self._views
+
+    def for_tier(self, tier: str) -> Any:
+        """The param tree a replica pinned to `tier` serves from."""
+        if tier not in self._views:
+            raise ValueError(f"tier {tier!r} not in this TieredWeights "
+                             f"(has {list(self.tier_names)})")
+        return self._views[tier]
+
+    def bytes_by_tier(self) -> dict:
+        """Resident weight bytes per tier view ('bf16' counts the float
+        source, which every quantized tier shares for free)."""
+        out = {}
+        for t in self.tier_names:
+            if TIERS[t].bits is None:
+                out[t] = sum(leaf.size * leaf.dtype.itemsize
+                             for leaf in jax.tree.leaves(self.source))
+            else:
+                out[t] = sum(
+                    leaf.nbytes for leaf in jax.tree.leaves(
+                        self._views[t],
+                        is_leaf=lambda v: isinstance(v, QuantizedTensor))
+                    if isinstance(leaf, QuantizedTensor))
+        return out
 
 
 def dequantize_params(params: Any, dtype=jnp.bfloat16) -> Any:

@@ -46,6 +46,18 @@ requests to the replica already holding their cached blocks, bounded by
 seed and per-request outputs are batch-composition independent, so
 `--engines N` is token-identical to `--engines 1` — gated by
 `benchmarks/ci_smoke.py --engines 2` on both backends.
+
+`--tiers fxp4,fxp8 --routing tiered` serves a heterogeneous precision
+fleet instead: one replica per listed ladder tier (`core.tiers.TIERS`),
+all sharing a single `TieredWeights` bank (quantize-once codes per tier
+plus one float source-of-truth). The router's `TierPolicy` places each
+request — an explicit pin (`--pin-tier`, or `Request.tier`) is honored
+unconditionally, `--priority` > 0 takes the best tier / < 0 the
+cheapest, and priority-0 requests degrade to a cheaper tier when the
+better tier's queue pressure exceeds `--tier-threshold`. Within a tier
+placement never changes tokens; across tiers it deliberately does —
+that is the accuracy/throughput trade the paper's runtime-reconfigurable
+PE exists for.
 """
 from __future__ import annotations
 
@@ -57,7 +69,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ARCH_IDS, get_config
 from ..core.backend import BACKENDS
-from ..core.qtensor import packed_bytes, quantize_params
+from ..core.qtensor import TieredWeights, packed_bytes, quantize_params
 from ..models import model as M
 from ..serving import (EngineRouter, Request, SamplingParams, ServingEngine)
 from ..serving.router import ROUTING_POLICIES
@@ -76,10 +88,11 @@ def prepare_serving_params(params, policy, packed=None):
 
 
 def make_requests(cfg, n, prompt_len, gen, mixed=False, temp=0.0, top_k=0,
-                  seed=0, shared_prefix=0):
+                  seed=0, shared_prefix=0, tier=None, priority=0):
     """n requests; `mixed` varies prompt lengths across [plen/2, plen];
     `shared_prefix` prepends a common system prompt of that many tokens to
-    every request (the prefix-cache workload)."""
+    every request (the prefix-cache workload); `tier`/`priority` stamp
+    every request's precision-tier pin / SLO class (tiered fleets)."""
     skey = jax.random.PRNGKey(seed + 1000)
     if cfg.input_mode == "tokens":
         system = jax.random.randint(skey, (shared_prefix,), 0, cfg.vocab)
@@ -99,7 +112,8 @@ def make_requests(cfg, n, prompt_len, gen, mixed=False, temp=0.0, top_k=0,
             prompt = jnp.concatenate([system, prompt])
         reqs.append(Request(prompt=prompt, max_new_tokens=gen,
                             sampling=SamplingParams(temperature=temp,
-                                                    top_k=top_k)))
+                                                    top_k=top_k),
+                            tier=tier, priority=priority))
     return reqs
 
 
@@ -168,46 +182,88 @@ def main(argv=None):
                     help="prefix-affinity only: max load lead the affinity "
                          "replica may have before a request spills to "
                          "least-loaded (default 4)")
+    ap.add_argument("--tiers", default="",
+                    help="comma-separated precision-tier ladder names "
+                         "(fxp4,fxp8,fxp16,bf16): build a heterogeneous "
+                         "fleet with one replica per entry, serving from "
+                         "a shared TieredWeights bank (overrides --engines "
+                         "and --policy; pair with --routing tiered)")
+    ap.add_argument("--tier-threshold", type=float, default=1.0,
+                    help="tiered fleets: queue-pressure admission "
+                         "threshold above which a priority-0 request "
+                         "degrades to a cheaper tier (pressure = (class "
+                         "load + 1) / class slot capacity)")
+    ap.add_argument("--pin-tier", default=None,
+                    help="pin EVERY generated request to this tier "
+                         "(hard SLO: never degraded, rejected if the "
+                         "fleet lacks the tier)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="SLO class stamped on every request: > 0 always "
+                         "best tier, < 0 always cheapest, 0 degrades "
+                         "under pressure")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    tiers = [t for t in args.tiers.split(",") if t]
     policy = policy_from_name(args.policy).with_backend(args.backend)
     mesh = make_tp_mesh(args.tp)
     with mesh:
         params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-        # quantize-once surgery for EVERY backend when the policy is FxP:
-        # the backend then selects only the compute path (reference
-        # dequantizes the same codes; pallas moves them packed), so
-        # reference-vs-pallas compares kernels, not quantization grids
-        params = prepare_serving_params(params, policy)
-        qb, fb = packed_bytes(params)
-        if fb:
-            print(f"quantized weights: {qb / 2**20:.1f} MiB moved per "
-                  f"full pass vs {fb / 2**20:.1f} MiB fp32 "
-                  f"({fb / max(qb, 1):.1f}x reduction)")
         common = dict(
-            policy=policy, max_slots=args.slots,
+            max_slots=args.slots,
             max_len=args.prompt_len + args.shared_prefix + args.gen,
             prefill_chunk=args.prefill_chunk, seed=args.seed,
             kv_block_size=args.kv_block_size or None,
             kv_blocks=args.kv_blocks or None,
             prefix_cache=args.prefix_cache,
             scheduler=args.scheduler, overlap=args.overlap)
-        if args.engines > 1:
-            # data-parallel fleet: every replica is built tp-sharded over
-            # the same mesh geometry, so --engines and --tp compose
-            engine = EngineRouter(cfg, params, engines=args.engines,
+        if tiers:
+            # heterogeneous precision fleet: the router wraps the FLOAT
+            # source tree in a shared TieredWeights bank (quantize-once
+            # codes per tier) and derives each replica's policy from the
+            # ladder, so --policy does not apply here
+            bank = TieredWeights(params, tiers)
+            per_tier = bank.bytes_by_tier()
+            print("tiered weight banks: " + ", ".join(
+                f"{t} {per_tier[t] / 2**20:.1f} MiB"
+                for t in bank.tier_names))
+            engine = EngineRouter(cfg, bank, tiers=tiers,
+                                  tier_threshold=args.tier_threshold,
+                                  backend=args.backend,
                                   routing=args.routing,
                                   stickiness=args.stickiness,
                                   tp=args.tp, **common)
         else:
-            engine = ServingEngine(cfg, params, mesh=mesh, **common)
+            # quantize-once surgery for EVERY backend when the policy is
+            # FxP: the backend then selects only the compute path
+            # (reference dequantizes the same codes; pallas moves them
+            # packed), so reference-vs-pallas compares kernels, not
+            # quantization grids
+            params = prepare_serving_params(params, policy)
+            qb, fb = packed_bytes(params)
+            if fb:
+                print(f"quantized weights: {qb / 2**20:.1f} MiB moved per "
+                      f"full pass vs {fb / 2**20:.1f} MiB fp32 "
+                      f"({fb / max(qb, 1):.1f}x reduction)")
+            if args.engines > 1:
+                # data-parallel fleet: every replica is built tp-sharded
+                # over the same mesh geometry, so --engines and --tp
+                # compose
+                engine = EngineRouter(cfg, params, engines=args.engines,
+                                      policy=policy,
+                                      routing=args.routing,
+                                      stickiness=args.stickiness,
+                                      tp=args.tp, **common)
+            else:
+                engine = ServingEngine(cfg, params, mesh=mesh,
+                                       policy=policy, **common)
         reqs = make_requests(cfg, args.requests, args.prompt_len, args.gen,
                              mixed=args.mixed, temp=args.temp,
                              top_k=args.top_k, seed=args.seed,
-                             shared_prefix=args.shared_prefix)
+                             shared_prefix=args.shared_prefix,
+                             tier=args.pin_tier, priority=args.priority)
         t0 = time.time()
         for r in reqs:
             engine.submit(r)
@@ -229,8 +285,9 @@ def main(argv=None):
     print(f"{len(finished)} requests, {total} tokens in {dt:.2f}s = "
           f"{total / dt:.1f} tok/s, slot utilization "
           f"{st['slot_utilization']:.0%} "
-          f"(policy {args.policy}, backend {args.backend}, arch {cfg.name})")
-    if args.engines > 1:
+          f"(policy {'tiers ' + args.tiers if tiers else args.policy}, "
+          f"backend {args.backend}, arch {cfg.name})")
+    if tiers or args.engines > 1:
         print(f"router: {st['engines']} engines, routing "
               f"{st['routing_policy']}, dispatched {st['dispatched']}, "
               f"{st['prefix_tokens_reused']} prompt tokens served from "
@@ -239,9 +296,16 @@ def main(argv=None):
               + (f", affinity hit rate {st['affinity_hit_rate']:.0%} "
                  f"({st['affinity_spills']} spills)"
                  if "affinity_hit_rate" in st else ""))
+        if "tier_placed" in st:
+            placed = ", ".join(f"{t}: {n}"
+                               for t, n in st["tier_placed"].items())
+            print(f"tiers: placed {{{placed}}}, {st['tier_pinned']} pinned, "
+                  f"{st['tier_degraded']} degraded under pressure "
+                  f"(threshold {st['tier_threshold']:.2f})")
         for i, pe in enumerate(st["per_engine"]):
-            print(f"  engine {i}: {pe['dispatched']} requests, queue depth "
-                  f"{pe['queue_depth']}, slot utilization "
+            tier_tag = f" [{pe['tier']}]" if pe["tier"] else ""
+            print(f"  engine {i}{tier_tag}: {pe['dispatched']} requests, "
+                  f"queue depth {pe['queue_depth']}, slot utilization "
                   f"{pe['slot_utilization']:.0%}, prefix hit rate "
                   f"{pe['prefix_hit_rate']:.0%}")
         return finished

@@ -4,16 +4,18 @@
 sampled-token feedback), a thin `ServingEngine` loop with sync and
 overlap-dispatch modes streaming `RequestOutput` events, and an
 `EngineRouter` fanning one admission queue out across N engine replicas
-(round-robin / least-loaded / prefix-affinity placement)."""
+(round-robin / least-loaded / prefix-affinity placement, plus tiered
+placement over a heterogeneous precision fleet via `TierPolicy`)."""
 from .api import FinishedRequest, Request, RequestOutput, SamplingParams
 from .engine import ServingEngine
 from .executor import ModelExecutor
 from .prefix_cache import PrefixCache
-from .router import ROUTING_POLICIES, EngineRouter, RoutingPolicy
+from .router import ROUTING_POLICIES, EngineRouter, RoutingPolicy, TierPolicy
 from .scheduler import (POLICIES, Scheduler, SchedulingPolicy,
                         ShortestPromptFirst)
 
 __all__ = ["Request", "RequestOutput", "FinishedRequest", "SamplingParams",
            "ServingEngine", "Scheduler", "SchedulingPolicy",
            "ShortestPromptFirst", "POLICIES", "ModelExecutor", "PrefixCache",
-           "EngineRouter", "RoutingPolicy", "ROUTING_POLICIES"]
+           "EngineRouter", "RoutingPolicy", "ROUTING_POLICIES",
+           "TierPolicy"]

@@ -27,13 +27,24 @@ class SamplingParams:
 @dataclasses.dataclass
 class Request:
     """One generation request. `prompt` is a [P] int token array/list (or
-    [P, d_model] float embeds for embeds-mode archs)."""
+    [P, d_model] float embeds for embeds-mode archs).
+
+    `tier` pins the request to a named precision tier of the serving
+    ladder (`core.tiers.TIERS`: 'fxp4' | 'fxp8' | 'fxp16' | 'bf16');
+    None lets the router's TierPolicy place it by `priority` and queue
+    pressure. A pinned tier is a hard SLO: the scheduler rejects it when
+    the engine/fleet doesn't serve that tier, and placement never
+    silently degrades it. `priority` is the soft knob for unpinned
+    requests: > 0 always takes the fleet's best (most accurate) tier,
+    < 0 always the cheapest, 0 degrades under pressure."""
     prompt: Any
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     seed: Optional[int] = None      # None -> derived from engine seed + id
     id: Optional[int] = None        # assigned at submit() when None
+    tier: Optional[str] = None      # explicit precision-tier pin
+    priority: int = 0               # SLO class for unpinned placement
 
 
 @dataclasses.dataclass
@@ -50,6 +61,7 @@ class FinishedRequest:
     finished_tick: int
     prefix_hit_tokens: int = 0      # prompt tokens served from the cache
     ttft_s: float = 0.0         # submit -> first sampled token (monotonic)
+    tier: Optional[str] = None  # precision tier the request was served at
 
 
 @dataclasses.dataclass
@@ -74,6 +86,7 @@ class RequestOutput:
     admitted_tick: int = -1
     prefix_hit_tokens: int = 0
     ttft_s: float = 0.0
+    tier: Optional[str] = None    # precision tier of the serving engine
 
     def to_finished(self) -> FinishedRequest:
         """Deprecated-view conversion; only terminal events convert."""
@@ -84,4 +97,5 @@ class RequestOutput:
             id=self.id, prompt=self.prompt, tokens=self.tokens,
             finish_reason=self.finish_reason, prompt_len=self.prompt_len,
             admitted_tick=self.admitted_tick, finished_tick=self.tick,
-            prefix_hit_tokens=self.prefix_hit_tokens, ttft_s=self.ttft_s)
+            prefix_hit_tokens=self.prefix_hit_tokens, ttft_s=self.ttft_s,
+            tier=self.tier)

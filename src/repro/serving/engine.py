@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.precision import policy_tier
 from ..launch.mesh import make_host_mesh, make_tp_mesh
 from .api import FinishedRequest, Request, RequestOutput, SamplingParams
 from .executor import ModelExecutor
@@ -109,6 +110,11 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.policy = policy
+        # ladder tier this engine serves at ('bf16' for native-precision
+        # policies, the matmul format for flexpe tiers, None off-ladder):
+        # stamped on every RequestOutput and what tier-pinned requests
+        # validate against
+        self.tier = policy_tier(policy)
         self.max_slots = max_slots
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
@@ -147,7 +153,7 @@ class ServingEngine:
             kv_block_size=kv_block_size if self.ex.paged else None,
             num_blocks=self.ex.num_blocks, paged=self.ex.paged,
             has_ssm=self.ex.has_ssm, prefix_cache=prefix,
-            block_shards=self.ex.pool_shards)
+            block_shards=self.ex.pool_shards, tier=self.tier)
 
         self.tick = 0
         self._inflight: deque = deque()      # dispatched, not yet drained
@@ -214,7 +220,7 @@ class ServingEngine:
             self._out_buffer.append(RequestOutput(
                 id=rid, new_tokens=[], tokens=[],
                 prompt_len=len(req.prompt), tick=self.tick, finished=True,
-                finish_reason="aborted", prompt=req.prompt))
+                finish_reason="aborted", prompt=req.prompt, tier=self.tier))
             return True
         found = self.sched.find_slot(rid)
         if found is None:
@@ -233,7 +239,7 @@ class ServingEngine:
             prompt_len=slot.prompt_len, tick=self.tick, finished=True,
             finish_reason="aborted", prompt=slot.request.prompt,
             admitted_tick=slot.admitted_tick,
-            prefix_hit_tokens=slot.prefix_hit))
+            prefix_hit_tokens=slot.prefix_hit, tier=self.tier))
         return True
 
     def has_work(self) -> bool:
@@ -393,7 +399,7 @@ class ServingEngine:
                 id=req.id, new_tokens=[t], tokens=list(slot.generated),
                 prompt_len=slot.prompt_len, tick=ent.tick, prompt=req.prompt,
                 admitted_tick=slot.admitted_tick,
-                prefix_hit_tokens=slot.prefix_hit)
+                prefix_hit_tokens=slot.prefix_hit, tier=self.tier)
             hit_eos = req.eos_id is not None and t == req.eos_id
             if hit_eos or len(slot.generated) >= req.max_new_tokens:
                 slot.done = True

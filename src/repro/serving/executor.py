@@ -57,6 +57,20 @@ def _sample_core(vocab: int, logits, keys, temps, topks):
     return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)
 
 
+def step_cache_key(cfg, policy, mesh, max_slots, alloc, chunk, params,
+                   kv_block_size=None, kv_blocks=None):
+    """The `_STEP_CACHE` key: everything that shapes the compiled triple.
+
+    Tier-relevant property (exposed as `ModelExecutor.step_cache_key`):
+    the policy — hence the serving TIER — is part of the key, while
+    param VALUES are not (only the treedef), so same-tier replicas of a
+    heterogeneous fleet share one compilation and different-tier
+    replicas get their own specialization, exactly the paper's
+    "run-time precision switching = selection among compiled modes"."""
+    return (cfg, policy, mesh, max_slots, alloc, chunk,
+            jax.tree_util.tree_structure(params), kv_block_size, kv_blocks)
+
+
 def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk, params,
                     kv_block_size=None, kv_blocks=None):
     """Jit the (prefill, decode+sample, seed) triple with full input/output
@@ -65,8 +79,8 @@ def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk, params,
     over `model`, everything else float replicates, and the paged pool
     partitions its block axis. On a 1-device mesh every sharding collapses
     to trivially-replicated and this is exactly the old unsharded jit."""
-    key = (cfg, policy, mesh, max_slots, alloc, chunk,
-           jax.tree_util.tree_structure(params), kv_block_size, kv_blocks)
+    key = step_cache_key(cfg, policy, mesh, max_slots, alloc, chunk, params,
+                         kv_block_size, kv_blocks)
     if key not in _STEP_CACHE:
         pspec = jax.eval_shape(lambda: params)
         prefill_fn, p_shard, _, pf_in, pf_out = S.build_prefill_step(
@@ -148,6 +162,10 @@ class ModelExecutor:
         self.has_ssm = "ssm" in self.cache
         self.num_blocks = (int(self.cache["kv"]["k"].shape[1])
                            if self.paged else 0)
+        self.step_cache_key = step_cache_key(
+            cfg, policy, mesh, max_slots, alloc, prefill_chunk, params,
+            kv_block_size if self.paged else None,
+            self.num_blocks if self.paged else None)
         (self._prefill, self._decode_sample, self._seed, p_shard,
          c_shard) = _compiled_steps(
             cfg, policy, mesh, max_slots, alloc, prefill_chunk, params,

@@ -11,12 +11,13 @@ half of POLARON's precision/placement-as-runtime-knobs framing.
 
 Routing policy is pluggable:
 
-  * `round-robin` — classic data-parallel dispatch, replica i+1 mod N.
-    Always dispatches immediately; the fleet load-balances statistically.
+  * `round-robin` — classic data-parallel dispatch, next replica in the
+    candidate class per request. Always dispatches immediately; the
+    fleet load-balances statistically.
   * `least-loaded` — fewest live requests (occupied slots + replica
     queue), ties to the lowest index. Holds requests at the router while
-    every replica is saturated, so the first freed slot anywhere takes
-    the head of the queue.
+    every candidate replica is saturated, so the first freed slot
+    anywhere takes the head of the queue.
   * `prefix-affinity` — requests whose prompt shares a chain-hashed
     block prefix (the SAME chain hash `serving/prefix_cache.py` keys
     physical blocks by) steer to the replica that already holds those
@@ -26,81 +27,120 @@ Routing policy is pluggable:
     starving the fleet: when the affinity replica's load runs more than
     `stickiness` requests ahead of the least-loaded one, the request
     spills to least-loaded instead (and re-sticks the prefix there).
+  * `tiered` — least-loaded placement within the precision-tier class
+    picked per request (requires `tiers`; see below).
 
-Every policy is a pure performance transform: per-request outputs are
-batch-composition independent (the long-standing engine invariant) and
-all replicas share one `seed`, so a request's tokens are bit-identical
-to running it alone on a single engine no matter which replica serves it
-or what shares the replica — `tests/test_router.py` and
-`benchmarks/ci_smoke.py --engines N` gate exactly that.
+**Precision tiers** (`tiers=['fxp4', 'fxp8']`): the fleet turns
+heterogeneous — replica i runs the `PrecisionPolicy` of ladder tier
+`tiers[i]` (`core.tiers.TIERS`), all serving from one shared
+`TieredWeights` bank (quantize-once codes per tier + one float source).
+A router-side `TierPolicy` picks each request's tier BEFORE the routing
+policy picks a replica inside that tier class: an explicit
+`Request.tier` pin is honored unconditionally, `priority > 0` takes the
+fleet's best (most accurate) tier, `priority < 0` the cheapest, and
+`priority == 0` walks best -> cheapest taking the first tier whose
+queue pressure — (class live load + 1) / class slot capacity, live load
+counting replica queues — clears `tier_threshold` (default 1.0: degrade
+exactly when the better tier would have to queue the request). Every
+routing policy composes: affinity probes and sticky entries are scoped
+to the candidate tier class, so a prefix sticks per tier, never across
+numerics boundaries.
+
+Placement within a tier is a pure performance transform: per-request
+outputs are batch-composition independent under composition-independent
+numerics (bf16 — see PR 8's caveat on flexpe's per-tensor dynamic
+activation scales) and all replicas share one `seed`, so a request's
+tokens are bit-identical to running it alone on a single engine at the
+same tier no matter which replica serves it. Placement across tiers is
+deliberately NOT numerics-preserving — that is the whole accuracy /
+throughput trade — which is why a tier pin is a hard contract: the tier
+a request lands on is stamped on every `RequestOutput`, and a pinned
+request is never degraded. `tests/test_tiered_routing.py` and
+`benchmarks/ci_smoke.py --tiers` gate exactly that.
 
 The router exposes the same streaming surface as a single engine —
 `submit() / events() / stream() / abort()` — with one merged event loop
 driving every replica's tick, and `stats()` aggregates fleet totals plus
-a `per_engine` breakdown (queue depth, slot utilization, prefix hit
-rate).
+`per_engine` and per-tier breakdowns.
 """
 from __future__ import annotations
 
 import hashlib
 from collections import deque
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from ..core.precision import tier_policy as make_tier_policy
+from ..core.qtensor import TieredWeights
+from ..core.tiers import tier_index
 from .api import FinishedRequest, Request, RequestOutput
 from .engine import ServingEngine
 from .prefix_cache import PrefixCache
 
-__all__ = ["EngineRouter", "RoutingPolicy", "ROUTING_POLICIES"]
+__all__ = ["EngineRouter", "RoutingPolicy", "ROUTING_POLICIES",
+           "TierPolicy"]
 
 
 class RoutingPolicy:
     """Pluggable placement policy: picks the replica index for the next
-    request. `holds_when_saturated` lets a policy keep the head of the
-    router queue un-dispatched while every replica is at capacity
-    (occupied slots + replica queue >= max_slots), so the first freed
-    slot anywhere serves it."""
+    request from `candidates` (the replica indices of the request's tier
+    class; the whole fleet when untiered). `holds_when_saturated` lets a
+    policy keep the head of the router queue un-dispatched while every
+    candidate is at capacity (occupied slots + replica queue >=
+    max_slots), so the first freed slot in the class serves it."""
 
     name = "round-robin"
     holds_when_saturated = False
 
     def pick(self, router: "EngineRouter", request: Request,
-             loads: List[int]) -> int:
+             loads: List[int], candidates: Sequence[int]) -> int:
         raise NotImplementedError
 
 
 class RoundRobin(RoutingPolicy):
-    """Replica i+1 mod N per request — the classic data-parallel front.
-    Dispatches unconditionally; replicas queue internally."""
+    """Next candidate replica per request — the classic data-parallel
+    front, rotating independently per candidate class. Dispatches
+    unconditionally; replicas queue internally."""
 
     name = "round-robin"
 
     def __init__(self):
-        self._next = 0
+        self._next: Dict[tuple, int] = {}
 
-    def pick(self, router, request, loads):
-        i = self._next
-        self._next = (i + 1) % len(router.engines)
-        return i
+    def pick(self, router, request, loads, candidates):
+        key = tuple(candidates)
+        i = self._next.get(key, 0)
+        self._next[key] = (i + 1) % len(candidates)
+        return candidates[i]
 
 
 class LeastLoaded(RoutingPolicy):
     """Fewest live requests wins, ties to the lowest replica index.
-    Holds at the router when the whole fleet is saturated."""
+    Holds at the router when the whole candidate class is saturated."""
 
     name = "least-loaded"
     holds_when_saturated = True
 
-    def pick(self, router, request, loads):
-        return min(range(len(loads)), key=lambda i: (loads[i], i))
+    def pick(self, router, request, loads, candidates):
+        return min(candidates, key=lambda i: (loads[i], i))
+
+
+class Tiered(LeastLoaded):
+    """The canonical heterogeneous-fleet policy: `TierPolicy` picks the
+    tier class, then least-loaded picks the replica inside it. Requires
+    the router to be constructed with `tiers`."""
+
+    name = "tiered"
 
 
 class PrefixAffinity(RoutingPolicy):
-    """Steer shared-prefix requests to the replica already holding their
-    chain-hashed prompt blocks; fall back to least-loaded, bounded by
-    `stickiness` (max load lead the affinity replica may have before the
-    request spills — and re-sticks its prefix — elsewhere)."""
+    """Steer shared-prefix requests to the candidate replica already
+    holding their chain-hashed prompt blocks; fall back to least-loaded,
+    bounded by `stickiness` (max load lead the affinity replica may have
+    before the request spills — and re-sticks its prefix — elsewhere).
+    Probes and sticky entries are scoped to the candidate class, so
+    affinity only ever sticks within a tier."""
 
     name = "prefix-affinity"
     holds_when_saturated = True
@@ -112,20 +152,23 @@ class PrefixAffinity(RoutingPolicy):
         self.affinity_hits = 0       # dispatches that followed affinity
         self.affinity_spills = 0     # affinity overridden by the bound
 
-    def pick(self, router, request, loads):
-        lo = min(range(len(loads)), key=lambda i: (loads[i], i))
+    def pick(self, router, request, loads, candidates):
+        lo = min(candidates, key=lambda i: (loads[i], i))
         keys = router._chain_keys(request.prompt)
+        # sticky entries key on (prefix, candidate class): one prefix may
+        # legitimately be hot on a replica of EVERY tier it is pinned to
+        skey = (keys[0], tuple(candidates)) if keys else None
         # deepest cached match wins (ties to the lowest index); the probe
         # is PrefixCache.peek — read-only, no LRU/stat perturbation
         aff, depth = None, 0
-        for i, eng in enumerate(router.engines):
-            d = eng.prefix_peek(keys)
+        for i in candidates:
+            d = router.engines[i].prefix_peek(keys)
             if d > depth:
                 aff, depth = i, d
-        if aff is None:
+        if aff is None and skey is not None:
             # routed-but-not-yet-cached prefixes (prefill still running,
             # or contiguous replicas with no prefix cache at all)
-            aff = router._sticky.get(keys[0]) if keys else None
+            aff = router._sticky.get(skey)
         if aff is not None:
             if loads[aff] - loads[lo] <= self.stickiness:
                 self.affinity_hits += 1
@@ -135,8 +178,8 @@ class PrefixAffinity(RoutingPolicy):
                 target = lo
         else:
             target = lo
-        if keys:
-            router._sticky[keys[0]] = target
+        if skey is not None:
+            router._sticky[skey] = target
         return target
 
 
@@ -144,6 +187,7 @@ ROUTING_POLICIES = {
     "round-robin": RoundRobin,
     "least-loaded": LeastLoaded,
     "prefix-affinity": PrefixAffinity,
+    "tiered": Tiered,
 }
 
 
@@ -159,6 +203,65 @@ def make_routing_policy(policy: Union[str, RoutingPolicy],
     return ROUTING_POLICIES[policy]()
 
 
+class TierPolicy:
+    """Per-request precision-tier selection for a heterogeneous fleet.
+
+    `pick()` is pure (safe to re-evaluate while the head of the queue is
+    held); the router calls `note()` once per ACTUAL placement so the
+    pinned/degraded counters never double-count a hold-retry.
+
+      * explicit `Request.tier` — honored unconditionally (the router
+        validated fleet support at submit).
+      * `priority > 0` — the best (most accurate) served tier, always.
+      * `priority < 0` — the cheapest tier, always.
+      * `priority == 0` — best -> cheapest walk, first tier whose
+        pressure clears `threshold`; cheapest if nothing does. Pressure
+        is (class live load + 1) / class slot capacity — "+1" counts the
+        request being placed, live load counts replica queues — so
+        threshold 1.0 degrades exactly when the tier would queue it.
+    """
+
+    def __init__(self, ladder: Sequence[str], threshold: float = 1.0):
+        if not ladder:
+            raise ValueError("TierPolicy needs at least one served tier")
+        if threshold <= 0:
+            raise ValueError("tier_threshold must be > 0")
+        # cheap -> best, the global ladder order
+        self.ladder = sorted(dict.fromkeys(ladder), key=tier_index)
+        self.threshold = threshold
+        self.pinned = 0          # placements that honored an explicit pin
+        self.degraded = 0        # priority-0 placements pushed off best
+        self.placed = {t: 0 for t in self.ladder}
+
+    @property
+    def best(self) -> str:
+        return self.ladder[-1]
+
+    @property
+    def cheapest(self) -> str:
+        return self.ladder[0]
+
+    def pick(self, request: Request, pressures: Dict[str, float]) -> str:
+        if request.tier is not None:
+            return request.tier
+        if request.priority > 0:
+            return self.best
+        if request.priority < 0:
+            return self.cheapest
+        for t in reversed(self.ladder):
+            if pressures[t] <= self.threshold:
+                return t
+        return self.cheapest
+
+    def note(self, request: Request, tier: str):
+        """Record an actual placement (called once per dispatch)."""
+        self.placed[tier] += 1
+        if request.tier is not None:
+            self.pinned += 1
+        elif request.priority == 0 and tier != self.best:
+            self.degraded += 1
+
+
 class EngineRouter:
     """Single admission queue fanning out over N `ServingEngine` replicas.
 
@@ -172,40 +275,94 @@ class EngineRouter:
         for out in router.events():
             ...
 
-    Engine-construction keywords (`policy`, `max_slots`, `max_len`,
+    Heterogeneous precision fleet: pass `tiers` (one ladder name per
+    replica — it overrides `engines`) and the router derives each
+    replica's `PrecisionPolicy` via `core.precision.tier_policy` and its
+    weights from a shared `TieredWeights` (built from `params` when a
+    plain float tree is passed; `backend` picks the kernel backend).
+    `routing="tiered"` is the canonical pairing; any policy composes.
+
+    Engine-construction keywords (`max_slots`, `max_len`,
     `prefill_chunk`, `kv_block_size`, `kv_blocks`, `prefix_cache`,
-    `scheduler`, `overlap`, `tp`, ...) apply to EVERY replica; `seed` is
-    shared deliberately — per-request RNG derives from (seed, request
-    id), so placement can never change a request's tokens. Replicas
+    `scheduler`, `overlap`, `tp`, ...) apply to EVERY replica (`policy`
+    too, unless `tiers` derives per-replica policies); `seed` is shared
+    deliberately — per-request RNG derives from (seed, request id), so
+    placement can never change a request's tokens. Untiered replicas
     share one `params` tree (and, through the executor's compiled-step
-    cache, one set of jitted steps); each replica owns its cache pool.
+    cache, one set of jitted steps — same-TIER replicas still share
+    compilations in a heterogeneous fleet); each replica owns its cache
+    pool.
     """
 
     def __init__(self, cfg, params, *, engines: int = 2,
                  routing: Union[str, RoutingPolicy] = "least-loaded",
                  stickiness: Optional[int] = None, max_slots: int = 4,
-                 kv_block_size: Optional[int] = None, **engine_kw):
-        if engines < 1:
-            raise ValueError("engines must be >= 1")
+                 kv_block_size: Optional[int] = None,
+                 tiers: Optional[Sequence[str]] = None,
+                 tier_threshold: float = 1.0, backend: str = "reference",
+                 **engine_kw):
         self.routing = make_routing_policy(routing, stickiness=stickiness)
-        self.engines = [
-            ServingEngine(cfg, params, max_slots=max_slots,
-                          kv_block_size=kv_block_size, **engine_kw)
-            for _ in range(engines)]
+        if tiers is not None:
+            if "policy" in engine_kw:
+                raise ValueError(
+                    "pass either tiers (per-replica policies derive from "
+                    "the ladder) or policy, not both")
+            if not tiers:
+                raise ValueError("tiers must name at least one replica")
+            for t in tiers:
+                tier_index(t)                # unknown tier -> ValueError
+            engines = len(tiers)
+            weights = (params if isinstance(params, TieredWeights)
+                       else TieredWeights(params, tiers))
+            for t in tiers:
+                if t not in weights:
+                    raise ValueError(
+                        f"tier {t!r} has no bank in the supplied "
+                        f"TieredWeights (has {list(weights.tier_names)})")
+            self.tiered_weights: Optional[TieredWeights] = weights
+            self.engines = [
+                ServingEngine(cfg, weights.for_tier(t),
+                              policy=make_tier_policy(t, backend=backend),
+                              max_slots=max_slots,
+                              kv_block_size=kv_block_size, **engine_kw)
+                for t in tiers]
+        else:
+            if isinstance(self.routing, Tiered):
+                raise ValueError(
+                    "routing='tiered' requires a heterogeneous fleet: "
+                    "pass tiers=['fxp4', 'fxp8', ...]")
+            if engines < 1:
+                raise ValueError("engines must be >= 1")
+            self.tiered_weights = None
+            self.engines = [
+                ServingEngine(cfg, params, max_slots=max_slots,
+                              kv_block_size=kv_block_size, **engine_kw)
+                for _ in range(engines)]
         self.max_slots = max_slots
+        # tier class map: ladder tier -> replica indices serving it (all
+        # replicas of an untiered homogeneous fleet still land here via
+        # their policy-derived engine.tier, so explicit pins route even
+        # without the tiers= ctor path)
+        self._tier_members: Dict[str, List[int]] = {}
+        for i, eng in enumerate(self.engines):
+            if eng.tier is not None:
+                self._tier_members.setdefault(eng.tier, []).append(i)
+        self.tier_policy = (TierPolicy(list(self._tier_members),
+                                       threshold=tier_threshold)
+                            if tiers is not None else None)
         # affinity keys reuse the replicas' chain hash exactly when the
         # pool is paged (so peek hits real cache entries); contiguous
         # replicas have no block size, so the sticky map keys on a fixed
         # granularity instead
         self._keyer = PrefixCache(kv_block_size or 16)
-        self._sticky: Dict[str, int] = {}
+        self._sticky: Dict[tuple, int] = {}
         self.pending: deque = deque()        # the single admission queue
         self._placement: Dict[int, int] = {}  # live rid -> replica index
         self._active_ids: set = set()        # router queue + placed
         self._next_id = 0
         self._out_buffer: deque = deque()
         self.tick = 0
-        self.dispatched = [0] * engines      # per-replica placements
+        self.dispatched = [0] * len(self.engines)  # per-replica placements
         self.aborted_requests = 0
 
     # -- affinity keying -----------------------------------------------------
@@ -222,15 +379,57 @@ class EngineRouter:
             arr = arr.astype(np.int64, copy=False)
         return [hashlib.sha1(arr.tobytes()).hexdigest()]
 
+    # -- tier accounting -----------------------------------------------------
+
+    @property
+    def served_tiers(self) -> List[str]:
+        """Ladder tiers this fleet serves, cheap -> best."""
+        return sorted(self._tier_members, key=tier_index)
+
+    def tier_loads(self) -> Dict[str, dict]:
+        """Per-tier-class live load, slot capacity, and admission
+        pressure — what `TierPolicy` degrades on."""
+        out = {}
+        for t, members in self._tier_members.items():
+            load = sum(self.engines[i].load for i in members)
+            cap = self.max_slots * len(members)
+            out[t] = {"load": load, "capacity": cap,
+                      "pressure": (load + 1) / cap}
+        return out
+
+    def _candidates(self, request: Request):
+        """(tier, replica indices) the routing policy may place `request`
+        on. Tier selection re-evaluates queue pressure on every call, so
+        a held head-of-queue request re-picks as the fleet drains."""
+        if self.tier_policy is not None:
+            pressures = {t: v["pressure"] for t, v in self.tier_loads().items()}
+            tier = self.tier_policy.pick(request, pressures)
+            return tier, self._tier_members[tier]
+        if request.tier is not None:
+            # homogeneous fleet: the pin was validated at submit, so the
+            # class exists — it is just every replica
+            return request.tier, self._tier_members[request.tier]
+        return None, list(range(len(self.engines)))
+
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, request: Request) -> int:
         """Validate against the replica geometry (identical across the
-        fleet), assign a router-unique id, and queue. Duplicate ids are
-        rejected across the WHOLE fleet — two live requests with one id
-        would collide in the merged event stream (and share an RNG
-        stream) regardless of which replicas they landed on."""
-        self.engines[0].sched.validate(request)
+        fleet) and the fleet's served tiers, assign a router-unique id,
+        and queue. EVERY check runs before any state mutates — a
+        rejected request leaks nothing into the queue, the id set, or
+        any replica. Duplicate ids are rejected across the WHOLE fleet —
+        two live requests with one id would collide in the merged event
+        stream (and share an RNG stream) regardless of which replicas
+        they landed on."""
+        self.engines[0].sched.validate(request, check_tier=False)
+        if request.tier is not None:
+            tier_index(request.tier)         # unknown name -> ValueError
+            if request.tier not in self._tier_members:
+                raise ValueError(
+                    f"request pinned to tier {request.tier!r} but this "
+                    f"fleet serves {self.served_tiers}; add a replica at "
+                    "that tier or drop the pin")
         if request.id is not None and request.id in self._active_ids:
             raise ValueError(
                 f"request id {request.id} is already pending or in flight "
@@ -256,7 +455,7 @@ class EngineRouter:
                     id=rid, new_tokens=[], tokens=[],
                     prompt_len=len(req.prompt), tick=self.tick,
                     finished=True, finish_reason="aborted",
-                    prompt=req.prompt))
+                    prompt=req.prompt, tier=req.tier))
                 return True
         eng_i = self._placement.get(rid)
         if eng_i is None:
@@ -276,16 +475,26 @@ class EngineRouter:
     # -- the merged tick loop ------------------------------------------------
 
     def _dispatch(self):
-        """Drain the admission queue through the routing policy. FIFO and
-        no-skip — the queue's head is placed (or held) before anything
-        behind it, so router-level ordering matches a single engine's."""
+        """Drain the admission queue through tier selection + the routing
+        policy. FIFO and no-skip — the queue's head is placed (or held)
+        before anything behind it, so router-level ordering matches a
+        single engine's even when a later request's tier class has idle
+        slots (head-of-line tier fairness is the same trade the paged
+        pool's no-skip admission already makes)."""
         while self.pending:
+            req = self.pending[0]
+            tier, candidates = self._candidates(req)
             loads = [e.load for e in self.engines]
             if (self.routing.holds_when_saturated
-                    and min(loads) >= self.max_slots):
-                break        # whole fleet saturated: hold at the router
-            req = self.pending.popleft()
-            target = self.routing.pick(self, req, loads)
+                    and min(loads[i] for i in candidates) >= self.max_slots):
+                break        # candidate class saturated: hold at the router
+            self.pending.popleft()
+            target = self.routing.pick(self, req, loads, candidates)
+            assert target in candidates, (
+                f"routing policy {self.routing.name} left the tier class: "
+                f"{target} not in {candidates}")
+            if self.tier_policy is not None:
+                self.tier_policy.note(req, tier)
             self.engines[target].submit(req)
             self._placement[req.id] = target
             self.dispatched[target] += 1
@@ -344,9 +553,11 @@ class EngineRouter:
 
     def check_invariants(self):
         """Fleet-wide consistency: every replica's block ledger audits
-        clean, and the router's id bookkeeping matches what it actually
+        clean, the router's id bookkeeping matches what it actually
         holds (queued ids + placed ids == active ids, no placement entry
-        without a live id)."""
+        without a live id), and tier placement never broke a pin — every
+        live tier-pinned request sits on (or is queued for) a replica of
+        exactly its tier."""
         for eng in self.engines:
             eng.check_invariants()
         queued = {r.id for r in self.pending}
@@ -359,13 +570,23 @@ class EngineRouter:
             f"replica: {sorted(queued & set(self._placement))}")
         for rid, i in self._placement.items():
             assert 0 <= i < len(self.engines), (rid, i)
+        # a pin is a hard contract: the serving replica's tier must match
+        for eng in self.engines:
+            for holder in list(eng.sched.pending) + [
+                    s.request for s in eng.sched.slots if s is not None]:
+                assert holder.tier is None or holder.tier == eng.tier, (
+                    f"tier pin broken: request {holder.id} pinned to "
+                    f"{holder.tier!r} is live on a {eng.tier!r} replica")
+        if self.tier_policy is not None:
+            assert sum(self.tier_policy.placed.values()) == sum(
+                self.dispatched), "tier placement counter drift"
 
     def stats(self) -> dict:
-        """Fleet totals plus a `per_engine` breakdown. Aggregates sum the
-        token/tick counters; `slot_utilization` is the fleet mean
-        weighted by each replica's slot-ticks; `prefix_hit_rate` is
-        prompt tokens served from a replica's prefix cache over prompt
-        tokens it processed."""
+        """Fleet totals plus `per_engine` and per-tier breakdowns.
+        Aggregates sum the token/tick counters; `slot_utilization` is
+        the fleet mean weighted by each replica's slot-ticks;
+        `prefix_hit_rate` is prompt tokens served from a replica's
+        prefix cache over prompt tokens it processed."""
         per = [e.stats() for e in self.engines]
         busy = sum(e.busy_slot_ticks for e in self.engines)
         total = sum(e.total_slot_ticks for e in self.engines)
@@ -393,7 +614,15 @@ class EngineRouter:
                                        / max(sum(self.dispatched), 1))
             st["affinity_spill_rate"] = (self.routing.affinity_spills
                                          / max(routed, 1))
+        st["tiers"] = [e.tier for e in self.engines]
+        if self.tier_policy is not None:
+            st["tier_threshold"] = self.tier_policy.threshold
+            st["tier_pinned"] = self.tier_policy.pinned
+            st["tier_degraded"] = self.tier_policy.degraded
+            st["tier_placed"] = dict(self.tier_policy.placed)
+            st["tier_loads"] = self.tier_loads()
         st["per_engine"] = [{
+            "tier": self.engines[i].tier,
             "queue_depth": s["pending_requests"],
             "slot_utilization": s["slot_utilization"],
             "prompt_tokens": s["prompt_tokens"],

@@ -24,6 +24,9 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+# the tier ladder lives in core.tiers, which is deliberately jax-free —
+# this module's no-jax property survives tier validation
+from ..core.tiers import tier_index
 from .api import Request
 from .prefix_cache import PrefixCache
 
@@ -110,9 +113,12 @@ class Scheduler:
                  num_blocks: Optional[int] = None, paged: bool = False,
                  has_ssm: bool = False,
                  prefix_cache: Optional[PrefixCache] = None,
-                 block_shards: int = 1):
+                 block_shards: int = 1, tier: Optional[str] = None):
         self.max_slots = max_slots
         self.max_len = max_len
+        # named precision tier this engine serves (None: untiered — an
+        # off-ladder policy; tier-pinned requests are then unservable)
+        self.tier = tier
         self.policy = make_policy(policy)
         self.kv_block_size = kv_block_size
         self.paged = paged
@@ -158,11 +164,23 @@ class Scheduler:
         bs = self.kv_block_size
         return -(-(len(request.prompt) + request.max_new_tokens) // bs)
 
-    def validate(self, request: Request):
+    def validate(self, request: Request, check_tier: bool = True):
         """Raise ValueError if `request` can never be served by this
         scheduler's geometry. Pure — no state mutates, so an external
         admission front (the multi-engine router) can pre-validate
-        against any replica before deciding placement."""
+        against any replica before deciding placement. `check_tier=False`
+        skips the single-engine tier-match check (the router owns tier
+        placement fleet-wide and runs its own unknown/unsupported-tier
+        checks before any state mutates anywhere)."""
+        if check_tier and request.tier is not None:
+            tier_index(request.tier)         # unknown name -> ValueError
+            if request.tier != self.tier:
+                raise ValueError(
+                    f"request pinned to tier {request.tier!r} but this "
+                    f"engine serves "
+                    + (f"tier {self.tier!r}" if self.tier is not None
+                       else "no ladder tier")
+                    + "; route it to a matching replica")
         plen = len(request.prompt)
         if plen < 1:
             raise ValueError("empty prompt: a request needs at least one "
@@ -470,7 +488,8 @@ class Scheduler:
                                         / max(self._queue_wait_n, 1)),
               "scheduler_policy": self.policy.name,
               "committed_blocks": self._committed,
-              "prefix_tokens_reused": self.prefix_tokens_reused}
+              "prefix_tokens_reused": self.prefix_tokens_reused,
+              "tier": self.tier}
         if self.paged:
             st["kv_blocks"] = self.num_blocks
             st["kv_block_size"] = self.kv_block_size

@@ -1,0 +1,285 @@
+"""Precision-tiered EngineRouter tests — the heterogeneous-fleet layer.
+
+The hard contract: a tier pin NEVER changes tokens — a request pinned to
+tier t through the tiered router decodes bit-identically to the same
+request on a single engine serving t's policy from the same
+`TieredWeights` bank, and is never served at any other tier (flexpe
+numerics included: an all-pinned stream gives the pinned replica the
+anchor's exact batch composition, so even composition-dependent dynamic
+activation scales match tick for tick).
+
+The soft knobs: priority routes unpinned requests to the best/cheapest
+class unconditionally, and priority-0 requests degrade to a cheaper tier
+exactly when the better tier's queue pressure crosses the admission
+threshold — and recover once it drains. Validation is leak-free: a
+rejected tier (unknown name, or one the fleet doesn't serve) mutates
+nothing, router- and scheduler-side.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import PrecisionPolicy, TieredWeights, tier_policy
+from repro.models import model as M
+from repro.serving import EngineRouter, Request, ServingEngine, TierPolicy
+
+KEY = jax.random.PRNGKey(0)
+TIERS2 = ["fxp4", "fxp8"]
+
+_PARAMS = {}
+
+
+def _setup(arch="qwen2_5_14b"):
+    if arch not in _PARAMS:
+        cfg = get_config(arch).reduced()
+        _PARAMS[arch] = (cfg, M.init_params(cfg, KEY, dtype=jnp.float32))
+    return _PARAMS[arch]
+
+
+def _prompt(i, plen, cfg):
+    key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+    return jax.random.randint(key, (plen,), 0, cfg.vocab)
+
+
+def _reqs(cfg, n=6, gen=3, tier=None, priority=0):
+    return [Request(prompt=_prompt(i, 4 + (i % 3) * 2, cfg),
+                    max_new_tokens=gen, id=i, tier=tier, priority=priority)
+            for i in range(n)]
+
+
+_KW = dict(max_slots=2, max_len=32, prefill_chunk=4, kv_block_size=4,
+           prefix_cache=True)
+
+
+def _router(cfg, params, tiers=TIERS2, **over):
+    kw = dict(_KW, **over)
+    return EngineRouter(cfg, params, tiers=tiers, routing="tiered", **kw)
+
+
+def _drive(target, reqs, audit=False):
+    for r in reqs:
+        target.submit(r)
+    toks, tiers = {}, {}
+    while target.has_work():
+        for o in target.step():
+            if o.finished:
+                toks[o.id], tiers[o.id] = o.tokens, o.tier
+        if audit:
+            target.check_invariants()
+    return toks, tiers
+
+
+# ---------------------------------------------------------------------------
+# the pin contract: token identity + never-degraded
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", TIERS2)
+def test_pinned_tier_token_identical_to_single_engine(tier):
+    """All requests pinned to one tier through the heterogeneous fleet ==
+    a single engine at that tier's policy, token for token, serving from
+    the SAME TieredWeights bank — within a tier the router must remain a
+    pure placement transform even for flexpe numerics."""
+    cfg, params = _setup()
+    bank = TieredWeights(params, TIERS2)
+    eng = ServingEngine(cfg, bank.for_tier(tier), policy=tier_policy(tier),
+                        **_KW)
+    anchor, _ = _drive(eng, _reqs(cfg))
+    router = _router(cfg, bank)
+    toks, served = _drive(router, _reqs(cfg, tier=tier), audit=True)
+    assert toks == anchor, (
+        f"pinned-to-{tier} fleet diverged from the single-engine anchor")
+    assert set(served.values()) == {tier}
+    assert router.stats()["tier_degraded"] == 0, (
+        "pinned requests must never count as degraded")
+
+
+def test_mixed_pins_each_served_at_their_tier():
+    cfg, params = _setup()
+    router = _router(cfg, params)
+    reqs = _reqs(cfg, n=6)
+    for r in reqs:
+        r.tier = TIERS2[r.id % 2]
+    _, served = _drive(router, reqs, audit=True)
+    assert served == {r.id: r.tier for r in reqs}
+    st = router.stats()
+    assert st["tier_pinned"] == 6 and st["tier_degraded"] == 0
+    assert st["tier_placed"] == {"fxp4": 3, "fxp8": 3}
+
+
+# ---------------------------------------------------------------------------
+# pressure degradation: triggers at the threshold, recovers on drain
+# ---------------------------------------------------------------------------
+
+def test_pressure_degradation_triggers_and_recovers():
+    """With 2 slots per replica and threshold 1.0, the first two
+    priority-0 requests take the best tier (pressure (load+1)/cap <= 1),
+    the overflow degrades to the cheap tier, and once the fleet drains a
+    fresh request is placed back on the best tier — pressure placement
+    re-evaluates live load, it is not sticky."""
+    cfg, params = _setup()
+    router = _router(cfg, params)
+    _, served = _drive(router, _reqs(cfg, n=6), audit=True)
+    st = router.stats()
+    assert served[0] == served[1] == "fxp8", (
+        "the first two requests fit the best tier's slots")
+    assert st["tier_degraded"] >= 2, (
+        f"overflow should degrade under pressure: {st['tier_placed']}")
+    assert st["tier_placed"]["fxp4"] == st["tier_degraded"]
+    # recovery: the fleet is idle again, so a new priority-0 request
+    # must land on the best tier, not stay degraded
+    late = Request(prompt=_prompt(99, 5, cfg), max_new_tokens=3, id=99)
+    _, served_late = _drive(router, [late])
+    assert served_late[99] == "fxp8"
+
+
+def test_tier_threshold_loosens_degradation():
+    """A higher admission threshold tolerates deeper best-tier queues:
+    with threshold >= (n+1)/capacity nothing ever degrades."""
+    cfg, params = _setup()
+    router = _router(cfg, params, tier_threshold=4.0)
+    _, served = _drive(router, _reqs(cfg, n=6), audit=True)
+    assert set(served.values()) == {"fxp8"}
+    assert router.stats()["tier_degraded"] == 0
+
+
+def test_priority_classes():
+    """priority > 0 always takes the best tier (queueing rather than
+    degrading); priority < 0 always the cheapest."""
+    cfg, params = _setup()
+    router = _router(cfg, params)
+    _, served_hi = _drive(router, _reqs(cfg, n=4, priority=1), audit=True)
+    assert set(served_hi.values()) == {"fxp8"}
+    assert router.stats()["tier_degraded"] == 0
+    router2 = _router(cfg, params)
+    _, served_lo = _drive(router2, _reqs(cfg, n=4, priority=-1))
+    assert set(served_lo.values()) == {"fxp4"}
+
+
+# ---------------------------------------------------------------------------
+# validation: leak-free rejection, scheduler- and router-side
+# ---------------------------------------------------------------------------
+
+def test_unknown_and_unsupported_tier_rejected_leak_free():
+    cfg, params = _setup()
+    router = _router(cfg, params)
+    before = (len(router.pending), len(router._active_ids),
+              [e.load for e in router.engines])
+    with pytest.raises(ValueError, match="unknown precision tier"):
+        router.submit(Request(prompt=_prompt(0, 5, cfg), max_new_tokens=3,
+                              tier="fxp999"))
+    with pytest.raises(ValueError, match="fleet serves"):
+        router.submit(Request(prompt=_prompt(0, 5, cfg), max_new_tokens=3,
+                              tier="bf16"))
+    after = (len(router.pending), len(router._active_ids),
+             [e.load for e in router.engines])
+    assert after == before, "rejected submissions must mutate nothing"
+    # the id a rejected request would have used is still free
+    rid = router.submit(Request(prompt=_prompt(0, 5, cfg), max_new_tokens=3,
+                                tier="fxp8", id=0))
+    assert rid == 0
+
+
+def test_duplicate_id_still_rejected_on_tiered_fleet():
+    cfg, params = _setup()
+    router = _router(cfg, params)
+    router.submit(Request(prompt=_prompt(0, 5, cfg), max_new_tokens=3, id=7,
+                          tier="fxp4"))
+    with pytest.raises(ValueError, match="already pending or in flight"):
+        router.submit(Request(prompt=_prompt(1, 5, cfg), max_new_tokens=3,
+                              id=7, tier="fxp8"))
+
+
+def test_scheduler_rejects_tier_mismatch_single_engine():
+    """A single engine serves exactly its policy's tier: matching pin
+    accepted, other-ladder pin rejected, and an off-ladder policy
+    (fxp12) serves NO tier so every pin is rejected."""
+    cfg, params = _setup()
+    eng = ServingEngine(cfg, params, policy=tier_policy("fxp8"),
+                        max_slots=2, max_len=32, prefill_chunk=4)
+    assert eng.tier == "fxp8"
+    eng.submit(Request(prompt=_prompt(0, 5, cfg), max_new_tokens=3,
+                       tier="fxp8"))
+    with pytest.raises(ValueError, match="route it to a matching replica"):
+        eng.submit(Request(prompt=_prompt(1, 5, cfg), max_new_tokens=3,
+                           tier="fxp4"))
+    off = ServingEngine(cfg, params, policy=PrecisionPolicy.flexpe(12),
+                        max_slots=2, max_len=32, prefill_chunk=4)
+    assert off.tier is None
+    with pytest.raises(ValueError, match="no ladder tier"):
+        off.submit(Request(prompt=_prompt(2, 5, cfg), max_new_tokens=3,
+                           tier="fxp8"))
+
+
+def test_router_ctor_validation():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="requires a heterogeneous fleet"):
+        EngineRouter(cfg, params, engines=2, routing="tiered", **_KW)
+    with pytest.raises(ValueError, match="not both"):
+        EngineRouter(cfg, params, tiers=TIERS2,
+                     policy=PrecisionPolicy.bf16(), **_KW)
+    with pytest.raises(ValueError, match="unknown precision tier"):
+        EngineRouter(cfg, params, tiers=["fxp4", "fxp7"], **_KW)
+    bank = TieredWeights(params, ["fxp8"])
+    with pytest.raises(ValueError, match="no bank"):
+        EngineRouter(cfg, bank, tiers=TIERS2, **_KW)
+
+
+# ---------------------------------------------------------------------------
+# fleet introspection: stats, invariants, compiled-step sharing
+# ---------------------------------------------------------------------------
+
+def test_per_tier_fleet_stats():
+    cfg, params = _setup()
+    router = _router(cfg, params)
+    _drive(router, _reqs(cfg, n=5), audit=True)
+    st = router.stats()
+    assert st["tiers"] == TIERS2
+    assert [pe["tier"] for pe in st["per_engine"]] == TIERS2
+    assert sum(st["tier_placed"].values()) == 5
+    assert st["tier_pinned"] == 0
+    assert set(st["tier_loads"]) == set(TIERS2)
+    for t, tl in st["tier_loads"].items():
+        assert tl["load"] == 0 and tl["capacity"] == 2  # drained fleet
+    assert st["tier_threshold"] == 1.0
+    # live pressure is visible mid-flight too
+    router.submit(Request(prompt=_prompt(50, 5, cfg), max_new_tokens=3,
+                          id=50, tier="fxp8"))
+    router.step()
+    assert router.tier_loads()["fxp8"]["load"] == 1
+
+
+def test_same_tier_replicas_share_compiled_steps():
+    """Replica pairs at the SAME tier must share one compiled-step cache
+    entry (identical cache key); different tiers must not — the
+    executor's cache key is the sharing contract `--tiers` relies on to
+    keep a heterogeneous fleet's compile count at one per tier."""
+    cfg, params = _setup()
+    router = EngineRouter(cfg, params, tiers=["fxp8", "fxp8", "fxp4"],
+                          routing="tiered", **_KW)
+    k0, k1, k2 = (e.ex.step_cache_key for e in router.engines)
+    assert k0 == k1, "same-tier replicas must share compiled steps"
+    assert k0 != k2, "different tiers must not share compiled steps"
+
+
+def test_tier_policy_unit():
+    tp = TierPolicy(["fxp8", "fxp4"])          # order normalises to ladder
+    assert tp.ladder == ["fxp4", "fxp8"]
+    assert tp.best == "fxp8" and tp.cheapest == "fxp4"
+    lo = {"fxp4": 0.5, "fxp8": 0.5}
+    hi = {"fxp4": 0.5, "fxp8": 1.5}
+    r = Request(prompt=[1], max_new_tokens=1)
+    assert tp.pick(r, lo) == "fxp8"
+    assert tp.pick(r, hi) == "fxp4"            # degrade under pressure
+    assert tp.pick(Request(prompt=[1], max_new_tokens=1, priority=1),
+                   hi) == "fxp8"
+    assert tp.pick(Request(prompt=[1], max_new_tokens=1, priority=-1),
+                   lo) == "fxp4"
+    assert tp.pick(Request(prompt=[1], max_new_tokens=1, tier="fxp4"),
+                   lo) == "fxp4"
+    saturated = {"fxp4": 2.0, "fxp8": 2.0}
+    assert tp.pick(r, saturated) == "fxp4"     # everything over: cheapest
+    with pytest.raises(ValueError):
+        TierPolicy([])
+    with pytest.raises(ValueError):
+        TierPolicy(["fxp8"], threshold=0.0)
