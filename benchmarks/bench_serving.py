@@ -63,6 +63,15 @@ Five measurements:
     anchor at that tier, and the per-tier CORDIC accuracy proxy
     (sigmoid MAE at each tier's Pareto stage pick) is reported
     informationally.
+  * (`--spec-decode d:v`) cross-tier speculative decoding — the uniform-
+    generation workload served by the verify tier alone vs the
+    draft/verify `SpecDecodeCoordinator` (cheap-tier proposals scored
+    k+1-at-a-time in one chunked verify dispatch). Both are
+    deterministic greedy schedules, so the gated
+    `spec_decode_verify_steps_reduction` is the tick ratio — one
+    expensive verify-tier dispatch per tick on both sides, fewer ticks
+    with speculation — and the coordinator's stream must be
+    token-identical to the verify tier alone (asserted at bf16 verify).
   * a BENCH_serving.json artifact for CI's perf-regression gate
     (`benchmarks/check_regression.py`): machine-portable ratios (engine
     vs static speedup, paged-vs-contiguous overhead, capacity ratio,
@@ -441,6 +450,70 @@ def _tier_experiment(cfg, params, tiers):
     }
 
 
+SPEC_GEN = 16               # uniform, long enough to amortize prefill
+
+
+def _spec_requests(cfg):
+    """The mixed prompts at a uniform generation length: speculative
+    rounds pay off during steady decode, so the workload holds every
+    slot in the decode phase long enough for the k-token rounds to
+    amortize the two prefill ticks."""
+    reqs = []
+    for i, plen in enumerate(PROMPT_LENS):
+        key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+        reqs.append(Request(prompt=jax.random.randint(key, (plen,), 0,
+                                                      cfg.vocab),
+                            max_new_tokens=SPEC_GEN, id=i))
+    return reqs
+
+
+def _spec_experiment(cfg, params, pair, k=4):
+    """Cross-tier speculative decoding vs the verify tier alone.
+
+    Both runs are deterministic schedules (greedy, fixed seeds, no EOS):
+    the verify-tier-alone engine spends one expensive verify-tier
+    dispatch per tick for `anchor_ticks` ticks; the coordinator drafts
+    on the cheap tier and spends one verify dispatch per round, so its
+    tick count IS its verify-dispatch count. The gated
+    `spec_decode_verify_steps_reduction` is the tick ratio — how many
+    verify-tier dispatches speculation saved. Token identity vs the
+    anchor is asserted whenever the verify tier is bf16 (composition-
+    independent numerics — PR 8's caveat on flexpe's dynamic activation
+    scales applies to any fxp verify tier, which is why the CI pair
+    verifies at bf16); acceptance rate and tokens-per-verify-step are
+    reported informationally."""
+    from repro.core.precision import tier_policy
+    from repro.core.qtensor import TieredWeights
+    from repro.serving import SpecDecodeCoordinator
+
+    draft, verify = pair.split(":")
+    bank = TieredWeights(params, (draft, verify))
+    kw = dict(max_slots=SLOTS, max_len=max(PROMPT_LENS) + SPEC_GEN,
+              prefill_chunk=PREFILL_CHUNK, kv_block_size=KV_BLOCK, tp=1)
+
+    anchor_eng = ServingEngine(cfg, bank.for_tier(verify),
+                               policy=tier_policy(verify), **kw)
+    anchor = {f.id: f.tokens for f in anchor_eng.run(_spec_requests(cfg))}
+    a_st = anchor_eng.stats()
+    co = SpecDecodeCoordinator.from_tiers(cfg, bank, draft, verify, k=k,
+                                          **kw)
+    got = {f.id: f.tokens for f in co.run(_spec_requests(cfg))}
+    st = co.stats()
+    if verify == "bf16":
+        assert got == anchor, (
+            f"speculative {pair} decode diverged from the {verify} anchor")
+    return {
+        "pair": pair,
+        "k": k,
+        "anchor_ticks": a_st["ticks"],
+        "spec_ticks": st["ticks"],
+        "verify_steps_reduction": a_st["ticks"] / max(st["ticks"], 1),
+        "acceptance_rate": st["spec_acceptance_rate"],
+        "tokens_per_verify_step": st["spec_tokens_per_verify_step"],
+        "rolled_back": st["spec_rolled_back"],
+    }
+
+
 def _capacity_at_budget(cfg, params, policy):
     """Peak concurrent requests under the contiguous layout's byte budget.
 
@@ -464,7 +537,7 @@ def _capacity_at_budget(cfg, params, policy):
     return peak, eng.stats()
 
 
-def run(rows, json_path=None, tp=0, engines=0, tiers=""):
+def run(rows, json_path=None, tp=0, engines=0, tiers="", spec_decode=""):
     cfg = get_config("qwen2_5_14b").reduced()
     policy = PrecisionPolicy.flexpe(8)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -495,6 +568,8 @@ def run(rows, json_path=None, tp=0, engines=0, tiers=""):
     tier_list = [t for t in tiers.split(",") if t]
     tier_res = (_tier_experiment(cfg, params, tier_list)
                 if len(tier_list) > 1 else None)
+    spec_res = (_spec_experiment(cfg, params, spec_decode)
+                if spec_decode else None)
     peak, stc = _capacity_at_budget(cfg, params, policy)
     attn_before, attn_after = _decode_attn_traffic(cfg, policy)
     attn_reduction = attn_before / attn_after
@@ -606,6 +681,21 @@ def run(rows, json_path=None, tp=0, engines=0, tiers=""):
                      f"{tier_res['throughput_gain']:.2f}x fewer fleet "
                      f"ticks via pressure degradation "
                      f"({tier_res['degraded_requests']} degraded)"))
+    if spec_res:
+        print(f"speculative decoding ({spec_res['pair']}, "
+              f"k={spec_res['k']}): {spec_res['anchor_ticks']} "
+              f"verify-tier-alone ticks -> {spec_res['spec_ticks']} "
+              f"speculative ticks "
+              f"({spec_res['verify_steps_reduction']:.2f}x fewer verify "
+              f"dispatches), acceptance {spec_res['acceptance_rate']:.0%}, "
+              f"{spec_res['tokens_per_verify_step']:.2f} tokens/verify "
+              f"step, {spec_res['rolled_back']} tokens rolled back, "
+              f"tokens identical to the verify tier alone")
+        rows.append(("serving_spec_ticks", spec_res["spec_ticks"],
+                     f"{spec_res['pair']} k={spec_res['k']} "
+                     f"{spec_res['verify_steps_reduction']:.2f}x fewer "
+                     f"verify dispatches at "
+                     f"{spec_res['acceptance_rate']:.0%} acceptance"))
     if json_path:
         metrics = {
             # absolute numbers (machine-dependent, reported for humans)
@@ -680,6 +770,21 @@ def run(rows, json_path=None, tp=0, engines=0, tiers=""):
             metrics.update({
                 f"tier_accuracy_mae_{t}": round(m, 5)
                 for t, m in tier_res["mae"].items()})
+        if spec_res:
+            metrics.update({
+                # the verify-dispatch reduction is a deterministic
+                # scheduling invariant (greedy acceptance over fixed
+                # seeds, no EOS, no wall clock) and is the gated metric;
+                # acceptance and tokens-per-verify-step inform
+                "spec_decode_pair": spec_res["pair"],
+                "spec_decode_k": spec_res["k"],
+                "spec_decode_verify_steps_reduction":
+                    round(spec_res["verify_steps_reduction"], 4),
+                "spec_decode_acceptance_rate":
+                    round(spec_res["acceptance_rate"], 4),
+                "spec_decode_tokens_per_verify_step":
+                    round(spec_res["tokens_per_verify_step"], 4),
+            })
         with open(json_path, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
             f.write("\n")
@@ -706,10 +811,16 @@ if __name__ == "__main__":
                          "vs pressure-degraded placement over a "
                          "heterogeneous router). '' = skip, omitting "
                          "tier_* metrics")
+    ap.add_argument("--spec-decode", default="", metavar="DRAFT:VERIFY",
+                    help="also run the cross-tier speculative decoding "
+                         "experiment with this tier pair (e.g. fxp8:bf16: "
+                         "verify-tier-alone ticks vs speculative "
+                         "coordinator ticks, deterministic). '' = skip, "
+                         "omitting spec_decode_* metrics")
     args = ap.parse_args()
     rows = []
     run(rows, json_path=args.json, tp=args.tp, engines=args.engines,
-        tiers=args.tiers)
+        tiers=args.tiers, spec_decode=args.spec_decode)
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

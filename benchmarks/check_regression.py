@@ -24,7 +24,11 @@ actually converts placement into prefix-cache hits), and
 over ticks with pressure degradation enabled on the precision-tiered
 router — deterministic scheduling, it verifies tier degradation
 actually activates the cheap replicas instead of queueing behind the
-accurate one).
+accurate one), and `spec_decode_verify_steps_reduction` (verify-tier-
+alone engine ticks over speculative-coordinator ticks — deterministic
+scheduling, it verifies cross-tier speculation actually converts cheap
+draft dispatches into saved verify-tier dispatches while streaming
+token-identical output).
 A gated metric more than `tolerance`
 below its baseline fails the job. `sample_syncs_per_token` is gated
 ABSOLUTELY (must stay < 1): the overlap-dispatch loop's whole point is
@@ -37,12 +41,14 @@ reference).
 After an intentional perf change, refresh the baseline with
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python benchmarks/bench_serving.py --tp 2 --engines 2 \
-        --tiers fxp4,fxp8 --json benchmarks/baselines/serving.json
-(the forced device count + --tp 2 + --engines 2 + --tiers keep the
-tensor-parallel, router, and precision-tier metrics in the baseline —
-CI gates `tp_kv_bytes_per_device_reduction`,
-`router_affinity_prefill_reduction`, and
-`tier_degrade_throughput_gain`) and commit
+        --tiers fxp4,fxp8 --spec-decode fxp8:bf16 \
+        --json benchmarks/baselines/serving.json
+(the forced device count + --tp 2 + --engines 2 + --tiers +
+--spec-decode keep the tensor-parallel, router, precision-tier, and
+speculative metrics in the baseline — CI gates
+`tp_kv_bytes_per_device_reduction`,
+`router_affinity_prefill_reduction`, `tier_degrade_throughput_gain`,
+and `spec_decode_verify_steps_reduction`) and commit
 it alongside the change. For the wall-clock-derived ratios
 (`speedup_vs_static`, `paged_speedup_vs_static`) prefer committing a
 value somewhat BELOW a fast dev machine's measurement: the gate only
@@ -74,7 +80,15 @@ GATED = ("speedup_vs_static", "paged_speedup_vs_static", "capacity_ratio",
          # invariant (degradation spreads overflow onto the cheap
          # replicas); CI runs bench_serving with --tiers fxp4,fxp8, so
          # the metric is always present there
-         "tier_degrade_throughput_gain")
+         "tier_degrade_throughput_gain",
+         # cross-tier speculative decoding: verify-tier-alone ticks over
+         # speculative coordinator ticks on the uniform-generation
+         # workload — a deterministic scheduling invariant (greedy
+         # acceptance over fixed seeds, no EOS, one verify-tier dispatch
+         # per tick on both sides, no wall clock); CI runs bench_serving
+         # with --spec-decode fxp8:bf16, so the metric is always present
+         # there
+         "spec_decode_verify_steps_reduction")
 # metric -> exclusive ceiling, independent of the baseline file
 ABSOLUTE_CEILINGS = {"sample_syncs_per_token": 1.0}
 INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
@@ -97,7 +111,13 @@ INFORMATIONAL = ("static_tok_s", "engine_tok_s", "paged_tok_s",
                  "tier_degraded_requests",
                  "tier_accuracy_mae_fxp4",
                  "tier_accuracy_mae_fxp8",
-                 "tier_accuracy_mae_fxp16")
+                 "tier_accuracy_mae_fxp16",
+                 # speculative decoding: acceptance depends on how well
+                 # the draft tier tracks the verifier on the workload;
+                 # tokens/verify-step is the same lever seen per dispatch
+                 # — both inform, the tick ratio above gates
+                 "spec_decode_acceptance_rate",
+                 "spec_decode_tokens_per_verify_step")
 
 
 def main(argv=None) -> int:

@@ -41,6 +41,22 @@ order as the anchor engine, so batch composition — and therefore every
 dynamic scale — matches tick for tick. A tier pin is a hard numerics
 contract and this is the gate that enforces it.
 
+`--spec-decode draft:verify` additionally runs the shared-prefix paged
++ prefix-cache workload through the cross-tier speculative
+`SpecDecodeCoordinator` (via `serve --spec-decode`) and requires token
+equality with a single-engine anchor serving the VERIFY tier's policy —
+speculation is a dispatch-count transform, never a numerics change. The
+verify tier must be bf16 for this gate: the verifier scores k+1
+positions in ONE chunked dispatch where the anchor decodes
+token-by-token, and flexpe's PER-TENSOR dynamic activation scales make
+low-order bits a function of the chunk's composition (the same
+pre-existing policy-numerics property PR 8 documented for batch
+composition — measured here too: an fxp8 verifier legitimately drifts
+from its own single-token anchor on both backends, bf16 is bit-exact).
+The DRAFT tier is unconstrained — fxp4 proposals only ever change how
+many verify dispatches are spent, which is what the acceptance counters
+assert.
+
 The paged runs exercise the fused paged-attention op on the decode hot
 loop (kernels/paged_attention via dispatch — reference impl under
 `--backend reference`, the block-table-walking Pallas kernel in
@@ -86,6 +102,13 @@ def main(argv=None) -> int:
                          "heterogeneous tiered router with every request "
                          "pinned to each tier in turn and require token "
                          "equality with a same-policy single-engine anchor")
+    ap.add_argument("--spec-decode", default="", metavar="DRAFT:VERIFY",
+                    help="also run the workload through the cross-tier "
+                         "speculative coordinator with this tier pair and "
+                         "require token equality with a single-engine "
+                         "anchor at the verify tier (verify must be bf16 "
+                         "— chunked verify dispatches change flexpe's "
+                         "composition-dependent activation scales)")
     args = ap.parse_args(argv)
 
     n, slots, plen, gen, chunk, shared = WORKLOADS[args.backend]
@@ -185,7 +208,54 @@ def main(argv=None) -> int:
                 print(f"FAIL: requests pinned to {t!r} were served at "
                       f"{sorted(served_at)}", file=sys.stderr)
                 return 1
+    spec_runs = {}
+    spec_finished = None
+    if args.spec_decode:
+        draft_t, _, verify_t = args.spec_decode.partition(":")
+        if verify_t != "bf16":
+            print(f"FAIL: --spec-decode verify tier must be bf16 for the "
+                  f"identity gate (got {verify_t!r}): the chunked verify "
+                  "dispatch changes flexpe's composition-dependent "
+                  "activation scales, so an fxp verifier legitimately "
+                  "drifts from its own token-by-token anchor",
+                  file=sys.stderr)
+            return 1
+        anchor_args = [a if a != "flexpe-fxp8" else "bf16"
+                       for a in paged_args]
+        print(f"== single-engine anchor, bf16, paged KV + prefix cache "
+              f"({args.backend}) ==")
+        spec_runs["anchor"] = {
+            f.id: f.tokens
+            for f in serve.main(anchor_args + ["--prefix-cache"])}
+        print(f"== speculative {args.spec_decode}, k=4, paged KV + prefix "
+              f"cache ({args.backend}) ==")
+        spec_finished = serve.main(
+            paged_args + ["--prefix-cache", "--spec-decode",
+                          args.spec_decode, "--spec-k", "4"])
+        spec_runs["spec-decode"] = {f.id: f.tokens for f in spec_finished}
     ok = True
+    if spec_runs:
+        if spec_runs["spec-decode"] != spec_runs["anchor"]:
+            bad = [i for i in spec_runs["anchor"]
+                   if spec_runs["anchor"][i] != spec_runs["spec-decode"].get(i)]
+            print(f"FAIL: speculative {args.spec_decode} decode diverged "
+                  f"from the single-engine bf16 anchor for request(s) "
+                  f"{bad}", file=sys.stderr)
+            ok = False
+        if sum(f.spec_verify_steps for f in spec_finished) <= 0:
+            print("FAIL: speculative run consumed zero verify dispatches — "
+                  "the coordinator never actually speculated",
+                  file=sys.stderr)
+            ok = False
+        if sum(f.spec_proposed for f in spec_finished) <= 0:
+            print("FAIL: speculative run proposed zero draft tokens",
+                  file=sys.stderr)
+            ok = False
+        off_tier = {f.tier for f in spec_finished} - {"bf16"}
+        if off_tier:
+            print(f"FAIL: speculative outputs stamped with non-verify "
+                  f"tier(s) {sorted(off_tier)}", file=sys.stderr)
+            ok = False
     for t in tiers:
         if tier_runs[f"tiered-pin-{t}"] != tier_runs[f"anchor-{t}"]:
             anchor = tier_runs[f"anchor-{t}"]
@@ -237,6 +307,11 @@ def main(argv=None) -> int:
     if tiers:
         router_note += (f", tiered fleet ({args.tiers}) pinned runs == "
                         f"per-tier anchors")
+    if spec_runs:
+        accepted = sum(f.spec_accepted for f in spec_finished)
+        proposed = sum(f.spec_proposed for f in spec_finished)
+        router_note += (f", speculative {args.spec_decode} == bf16 anchor "
+                        f"({accepted}/{proposed} draft tokens accepted)")
     print(f"smoke OK: {len(runs['contiguous'])} requests, prefix-cache == "
           f"paged == sync == overlap bit-exact{router_note}, {reused} "
           f"prompt tokens served from the prefix cache ({args.backend})")

@@ -58,6 +58,14 @@ better tier's queue pressure exceeds `--tier-threshold`. Within a tier
 placement never changes tokens; across tiers it deliberately does —
 that is the accuracy/throughput trade the paper's runtime-reconfigurable
 PE exists for.
+
+`--spec-decode fxp4:fxp8` turns on cross-tier speculative decoding: a
+cheap-tier draft engine proposes `--spec-k` tokens per round, the verify
+tier scores all of them in one chunked dispatch, and greedy acceptance
+keeps the stream token-identical to serving the verify tier alone —
+rejected suffixes roll back out of the paged KV pool. Composes with
+`--tiers` (only the verify-tier replicas turn speculative) and serves
+greedy requests only.
 """
 from __future__ import annotations
 
@@ -201,6 +209,18 @@ def main(argv=None):
                     help="SLO class stamped on every request: > 0 always "
                          "best tier, < 0 always cheapest, 0 degrades "
                          "under pressure")
+    ap.add_argument("--spec-decode", default=None, metavar="DRAFT:VERIFY",
+                    help="cross-tier speculative decoding, e.g. fxp4:fxp8: "
+                         "a cheap-tier draft engine proposes --spec-k "
+                         "tokens per round and the verify-tier engine "
+                         "scores them in one chunked dispatch — streams "
+                         "stay token-identical to the verify tier alone "
+                         "(greedy requests only). With --tiers, the "
+                         "verify-tier replicas turn speculative; without, "
+                         "every replica does (--policy does not apply)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative draft depth per round "
+                         "(k <= --prefill-chunk + 1)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -219,12 +239,15 @@ def main(argv=None):
             kv_blocks=args.kv_blocks or None,
             prefix_cache=args.prefix_cache,
             scheduler=args.scheduler, overlap=args.overlap)
+        spec_pair = (args.spec_decode.split(":")
+                     if args.spec_decode else [])
         if tiers:
             # heterogeneous precision fleet: the router wraps the FLOAT
             # source tree in a shared TieredWeights bank (quantize-once
             # codes per tier) and derives each replica's policy from the
-            # ladder, so --policy does not apply here
-            bank = TieredWeights(params, tiers)
+            # ladder, so --policy does not apply here; a --spec-decode
+            # draft tier rides the same bank
+            bank = TieredWeights(params, tiers + spec_pair)
             per_tier = bank.bytes_by_tier()
             print("tiered weight banks: " + ", ".join(
                 f"{t} {per_tier[t] / 2**20:.1f} MiB"
@@ -234,6 +257,20 @@ def main(argv=None):
                                   backend=args.backend,
                                   routing=args.routing,
                                   stickiness=args.stickiness,
+                                  spec_decode=args.spec_decode,
+                                  spec_k=args.spec_k,
+                                  tp=args.tp, **common)
+        elif args.spec_decode:
+            # speculative fleet without --tiers: every replica is a
+            # draft/verify coordinator pair off one TieredWeights bank;
+            # per-side policies derive from the tier pair, so --policy
+            # does not apply
+            engine = EngineRouter(cfg, params, engines=args.engines,
+                                  backend=args.backend,
+                                  routing=args.routing,
+                                  stickiness=args.stickiness,
+                                  spec_decode=args.spec_decode,
+                                  spec_k=args.spec_k,
                                   tp=args.tp, **common)
         else:
             # quantize-once surgery for EVERY backend when the policy is
@@ -287,7 +324,13 @@ def main(argv=None):
           f"{st['slot_utilization']:.0%} "
           f"(policy {'tiers ' + args.tiers if tiers else args.policy}, "
           f"backend {args.backend}, arch {cfg.name})")
-    if tiers or args.engines > 1:
+    if tiers or args.engines > 1 or args.spec_decode:
+        if "spec_decode" in st:
+            print(f"speculative: {st['spec_decode']} k={st['spec_k']}, "
+                  f"{st['spec_accepted']}/{st['spec_proposed']} draft "
+                  f"tokens accepted ({st['spec_acceptance_rate']:.0%}), "
+                  f"{st['spec_verify_steps']} verify steps, "
+                  f"{st['spec_rolled_back']} tokens rolled back from KV")
         print(f"router: {st['engines']} engines, routing "
               f"{st['routing_policy']}, dispatched {st['dispatched']}, "
               f"{st['prefix_tokens_reused']} prompt tokens served from "

@@ -5,7 +5,9 @@ sampled-token feedback), a thin `ServingEngine` loop with sync and
 overlap-dispatch modes streaming `RequestOutput` events, and an
 `EngineRouter` fanning one admission queue out across N engine replicas
 (round-robin / least-loaded / prefix-affinity placement, plus tiered
-placement over a heterogeneous precision fleet via `TierPolicy`)."""
+placement over a heterogeneous precision fleet via `TierPolicy`), and a
+`SpecDecodeCoordinator` pairing a cheap-tier draft engine with an
+accurate-tier verifier for cross-tier speculative decoding."""
 from .api import FinishedRequest, Request, RequestOutput, SamplingParams
 from .engine import ServingEngine
 from .executor import ModelExecutor
@@ -13,9 +15,10 @@ from .prefix_cache import PrefixCache
 from .router import ROUTING_POLICIES, EngineRouter, RoutingPolicy, TierPolicy
 from .scheduler import (POLICIES, Scheduler, SchedulingPolicy,
                         ShortestPromptFirst)
+from .speculative import SpecDecodeCoordinator
 
 __all__ = ["Request", "RequestOutput", "FinishedRequest", "SamplingParams",
            "ServingEngine", "Scheduler", "SchedulingPolicy",
            "ShortestPromptFirst", "POLICIES", "ModelExecutor", "PrefixCache",
            "EngineRouter", "RoutingPolicy", "ROUTING_POLICIES",
-           "TierPolicy"]
+           "TierPolicy", "SpecDecodeCoordinator"]

@@ -62,6 +62,17 @@ class FinishedRequest:
     prefix_hit_tokens: int = 0      # prompt tokens served from the cache
     ttft_s: float = 0.0         # submit -> first sampled token (monotonic)
     tier: Optional[str] = None  # precision tier the request was served at
+    # speculative-decode counters (all zero when served non-speculatively)
+    spec_proposed: int = 0      # draft tokens proposed for this request
+    spec_accepted: int = 0      # draft tokens the verifier accepted
+    spec_verify_steps: int = 0  # chunked verify dispatches consumed
+    spec_rolled_back: int = 0   # rejected draft tokens rolled back from KV
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Accepted / proposed draft tokens (0.0 when not speculative)."""
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
 
 
 @dataclasses.dataclass
@@ -87,6 +98,18 @@ class RequestOutput:
     prefix_hit_tokens: int = 0
     ttft_s: float = 0.0
     tier: Optional[str] = None    # precision tier of the serving engine
+    # speculative-decode counters (populated on terminal events by the
+    # SpecDecodeCoordinator; zero under plain engines/routers)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_verify_steps: int = 0
+    spec_rolled_back: int = 0
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Accepted / proposed draft tokens (0.0 when not speculative)."""
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed else 0.0)
 
     def to_finished(self) -> FinishedRequest:
         """Deprecated-view conversion; only terminal events convert."""
@@ -98,4 +121,7 @@ class RequestOutput:
             finish_reason=self.finish_reason, prompt_len=self.prompt_len,
             admitted_tick=self.admitted_tick, finished_tick=self.tick,
             prefix_hit_tokens=self.prefix_hit_tokens, ttft_s=self.ttft_s,
-            tier=self.tier)
+            tier=self.tier, spec_proposed=self.spec_proposed,
+            spec_accepted=self.spec_accepted,
+            spec_verify_steps=self.spec_verify_steps,
+            spec_rolled_back=self.spec_rolled_back)

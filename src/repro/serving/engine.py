@@ -487,7 +487,16 @@ class ServingEngine:
               "sample_syncs_per_token": (self.sample_sync_tokens
                                          / max(self.emitted_tokens, 1)),
               "wasted_decodes": self.wasted_decodes,
-              "aborted_requests": self.aborted_requests}
+              "aborted_requests": self.aborted_requests,
+              # spec counters are part of the uniform stats schema so
+              # fleet aggregation reads one shape whether a member is a
+              # plain engine or a SpecDecodeCoordinator (which overrides
+              # them with real values)
+              "spec_proposed": 0,
+              "spec_accepted": 0,
+              "spec_acceptance_rate": 0.0,
+              "spec_verify_steps": 0,
+              "spec_rolled_back": 0}
         st.update(self.sched.stats())
         if self.ex.paged:
             st["cow_copies"] = self.ex.cow_copies

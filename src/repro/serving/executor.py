@@ -36,7 +36,8 @@ from ..launch.mesh import make_host_mesh
 from ..models import model as M
 
 #: compiled (prefill, decode+sample, seed) step triples shared across
-#: executor instances
+#: executor instances, plus ("verify", key, chunk)-keyed chunked verify
+#: steps for speculative decoding
 _STEP_CACHE: dict = {}
 
 
@@ -137,6 +138,64 @@ def _compiled_steps(cfg, policy, mesh, max_slots, alloc, chunk, params,
     return _STEP_CACHE[key]
 
 
+def build_verify_step(cfg, mesh, policy, batch, max_len, chunk,
+                      kv_block_size=None, kv_blocks=None, params_spec=None):
+    """The speculative-verify step: an explicit token grid [B, chunk] +
+    per-row `n_valid` against the slot-pool cache, scoring EVERY position
+    in one chunked dispatch — `decode_step(..., last_only=False)`, the
+    same ragged machinery chunked prefill runs on — and reducing each
+    position to its greedy token in-jit, so the host syncs a small
+    [B, chunk] int32 grid instead of [B, chunk, V] logits.
+
+    The greedy reduction is exactly `_sample_core`'s `temps <= 0` branch
+    (argmax over the true vocab in f32), so position j's token is
+    bit-identical to what a plain decode dispatch at that position would
+    sample under greedy — the property the acceptance rule's
+    token-identity guarantee rests on. Rows with `n_valid == 0` are fed
+    zeros and leave the step bit-untouched; each live row's feedback
+    buffer entry lands on its LAST valid position's token, keeping the
+    buffer consistent for a later plain-decode dispatch against the row.
+
+    Returns (verify_fn, p_shard, c_shard) where
+    verify_fn(params, cache, tokens, n_valid, token_buf) ->
+    (tokens_out [B, chunk], new_buf [B], new_cache); the step advances
+    each row's cache length by its n_valid (draft ingest, verification
+    and post-rollback SSM replay are all this one step at different
+    n_valid)."""
+    rules = S.MeshRules(mesh, serve=params_spec is not None)
+    params_specs = (params_spec if params_spec is not None
+                    else S.model_state_specs(cfg, with_opt=False))
+    p_shard = rules.param_shardings(M.param_axes(cfg), params_specs)
+    specs = S.input_specs(cfg, "decode_32k", policy, batch=batch,
+                          max_len=max_len, chunk=chunk,
+                          kv_block_size=kv_block_size, kv_blocks=kv_blocks)
+    c_shard = S.cache_shardings(cfg, rules, specs["cache"], batch)
+    vocab, d_model = cfg.vocab, cfg.d_model
+    tokens_mode = cfg.input_mode == "tokens"
+
+    def verify_fn(params, cache, tokens, n_valid, token_buf):
+        live = jnp.arange(chunk)[None, :] < n_valid[:, None]
+        if tokens_mode:
+            feed = jnp.where(live, tokens, 0)
+        else:
+            # embeds-mode stubs feed the one-hot of each token id, zeroed
+            # past the valid frontier (same convention as decode_sample)
+            oh = jax.nn.one_hot(tokens % d_model, d_model,
+                                dtype=jnp.bfloat16)
+            feed = oh * live[..., None]
+        logits, new_cache = M.decode_step(cfg, params, cache, feed,
+                                          policy=policy, shard=rules,
+                                          n_valid=n_valid, last_only=False)
+        toks = jnp.argmax(logits[..., :vocab].astype(jnp.float32),
+                          axis=-1).astype(jnp.int32)
+        idx = jnp.clip(n_valid - 1, 0, chunk - 1)
+        last = jnp.take_along_axis(toks, idx[:, None], axis=1)[:, 0]
+        new_buf = jnp.where(n_valid > 0, last, token_buf)
+        return toks, new_buf, new_cache
+
+    return verify_fn, p_shard, c_shard
+
+
 class ModelExecutor:
     """Device-side execution engine behind the scheduler/engine split."""
 
@@ -149,16 +208,21 @@ class ModelExecutor:
         if mesh is None:
             mesh = make_host_mesh()
         self.mesh = mesh
+        self.policy = policy
         self.tp = (int(mesh.shape["model"])
                    if "model" in mesh.axis_names else 1)
         # over-allocate by one chunk: a ragged write window [len, len+chunk)
         # must stay in bounds for every row with len < max_len (see
         # layers.ragged_cache_update)
         alloc = max_len + prefill_chunk
+        self.alloc = alloc
+        self._verify_step = None
+        self.verify_chunk = 0
         self.cache = M.init_cache(cfg, max_slots, alloc, policy,
                                   kv_block_size=kv_block_size,
                                   kv_blocks=kv_blocks)
         self.paged = "block_tables" in self.cache
+        self.kv_block_size = kv_block_size if self.paged else None
         self.has_ssm = "ssm" in self.cache
         self.num_blocks = (int(self.cache["kv"]["k"].shape[1])
                            if self.paged else 0)
@@ -243,6 +307,12 @@ class ModelExecutor:
     def reset_ssm_row(self, row: int):
         self._ssm_reset_rows.append(row)
 
+    def clear_table_entry(self, row: int, idx: int):
+        """Return one block-table entry to the sentinel (speculative
+        rollback just dropped the block past the accepted frontier)."""
+        self._tables_host[row, idx] = self.num_blocks
+        self._tables_dirty = True
+
     def fork_block(self, src: int, dst: int):
         """Copy-on-write fork of one pool block (codes AND paged scales)."""
         self.cache = M.copy_pool_blocks(
@@ -300,3 +370,56 @@ class ModelExecutor:
             self._token_buf, jnp.asarray(np.asarray(rows, np.int32)),
             jnp.stack(logits_rows), keys, temps, topks)
         return toks
+
+    # -- speculative decoding (chunked verify + rollback support) -----------
+
+    def ensure_verify_step(self, chunk: int):
+        """Compile (or fetch from the shared step cache) the chunked
+        verify step at width `chunk` = k+1; idempotent, and cached across
+        executor instances exactly like the main step triple."""
+        if self.verify_chunk == chunk:
+            return
+        key = ("verify", self.step_cache_key, chunk)
+        if key not in _STEP_CACHE:
+            pspec = jax.eval_shape(lambda: self.params)
+            fn, p_shard, c_shard = build_verify_step(
+                self.cfg, self.mesh, self.policy, batch=self.max_slots,
+                max_len=self.alloc, chunk=chunk,
+                kv_block_size=self.kv_block_size,
+                kv_blocks=self.num_blocks if self.paged else None,
+                params_spec=pspec)
+            rep = NamedSharding(self.mesh, P())
+            _STEP_CACHE[key] = jax.jit(
+                fn, donate_argnums=(1, 4),
+                in_shardings=(p_shard, c_shard, rep, rep, rep),
+                out_shardings=(rep, rep, c_shard))
+        self._verify_step = _STEP_CACHE[key]
+        self.verify_chunk = chunk
+
+    def verify(self, tokens: np.ndarray, n_valid: np.ndarray):
+        """One chunked verify dispatch: explicit token grid [B, chunk]
+        (draft proposals / catch-up replay) with per-row valid counts;
+        returns per-position greedy tokens [B, chunk] (device, unsynced).
+        Mirrors the step's per-row `+= n_valid` length advance."""
+        nv = np.asarray(n_valid, np.int32)
+        toks, self._token_buf, self.cache = self._verify_step(
+            self.params, self.cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(nv), self._token_buf)
+        self._lengths_host += nv             # mirror the step's +n_valid
+        return toks
+
+    def checkpoint_ssm(self):
+        """Snapshot the recurrent SSM/conv state ahead of a speculative
+        dispatch. The decode steps donate the cache, so the snapshot must
+        be real copies — not aliases of soon-invalidated buffers."""
+        return tuple(jnp.array(a, copy=True) for a in self.cache["ssm"])
+
+    def restore_ssm_rows(self, rows: List[int], saved):
+        """Rewind `rows`' recurrent state to a `checkpoint_ssm` snapshot.
+        A KV window truncates by clamping the length mirror, but a
+        recurrent carry has already folded the rejected draft positions
+        in — the only rollback is restore-then-replay."""
+        r = jnp.asarray(np.asarray(sorted(rows), np.int32))
+        self.cache["ssm"] = tuple(
+            a.at[:, r].set(s[:, r])
+            for a, s in zip(self.cache["ssm"], saved))

@@ -58,6 +58,18 @@ a request lands on is stamped on every `RequestOutput`, and a pinned
 request is never degraded. `tests/test_tiered_routing.py` and
 `benchmarks/ci_smoke.py --tiers` gate exactly that.
 
+**Speculative decoding** (`spec_decode='fxp4:fxp8'`): replicas serving
+the verify tier are constructed as `SpecDecodeCoordinator`s — a hidden
+cheap-tier draft engine proposes k tokens per round and the verify-tier
+engine scores them in one chunked dispatch, emitting streams
+token-identical to the verify tier alone (see `serving/speculative.py`).
+Composition with `tiers` is by class: only the verify-tier class turns
+speculative (its draft codes ride the same `TieredWeights` bank); every
+other tier class keeps plain replicas. On an untiered fleet every
+replica becomes a coordinator. Acceptance is defined against the
+verifier's argmax, so a speculative fleet is greedy-only: `submit`
+rejects sampled requests up front.
+
 The router exposes the same streaming surface as a single engine —
 `submit() / events() / stream() / abort()` — with one merged event loop
 driving every replica's tick, and `stats()` aggregates fleet totals plus
@@ -77,6 +89,7 @@ from ..core.tiers import tier_index
 from .api import FinishedRequest, Request, RequestOutput
 from .engine import ServingEngine
 from .prefix_cache import PrefixCache
+from .speculative import SpecDecodeCoordinator
 
 __all__ = ["EngineRouter", "RoutingPolicy", "ROUTING_POLICIES",
            "TierPolicy"]
@@ -282,6 +295,11 @@ class EngineRouter:
     plain float tree is passed; `backend` picks the kernel backend).
     `routing="tiered"` is the canonical pairing; any policy composes.
 
+    Speculative fleet: pass `spec_decode="draft:verify"` (+ `spec_k`)
+    and verify-tier replicas become `SpecDecodeCoordinator`s sharing the
+    same bank (untiered fleets turn every replica speculative). Greedy
+    requests only; streams stay token-identical to the verify tier.
+
     Engine-construction keywords (`max_slots`, `max_len`,
     `prefill_chunk`, `kv_block_size`, `kv_blocks`, `prefix_cache`,
     `scheduler`, `overlap`, `tp`, ...) apply to EVERY replica (`policy`
@@ -300,8 +318,34 @@ class EngineRouter:
                  kv_block_size: Optional[int] = None,
                  tiers: Optional[Sequence[str]] = None,
                  tier_threshold: float = 1.0, backend: str = "reference",
+                 spec_decode: Optional[str] = None, spec_k: int = 4,
                  **engine_kw):
         self.routing = make_routing_policy(routing, stickiness=stickiness)
+        self.spec_decode: Optional[tuple] = None
+        self.spec_k = spec_k
+        if spec_decode is not None:
+            draft, _, verify = spec_decode.partition(":")
+            if not draft or not verify:
+                raise ValueError(
+                    f"spec_decode must be 'draft:verify' (ladder tier "
+                    f"names), got {spec_decode!r}")
+            if tier_index(draft) >= tier_index(verify):
+                raise ValueError(
+                    f"spec_decode draft tier {draft!r} must sit below the "
+                    f"verify tier {verify!r} on the ladder — a draft at "
+                    "or above the verifier's precision has nothing to "
+                    "accelerate")
+            self.spec_decode = (draft, verify)
+
+        def spec_coordinator(weights, verify_t):
+            d, _ = self.spec_decode
+            return SpecDecodeCoordinator(
+                cfg, weights.for_tier(d), weights.for_tier(verify_t),
+                draft_policy=make_tier_policy(d, backend=backend),
+                verify_policy=make_tier_policy(verify_t, backend=backend),
+                k=spec_k, max_slots=max_slots,
+                kv_block_size=kv_block_size, **engine_kw)
+
         if tiers is not None:
             if "policy" in engine_kw:
                 raise ValueError(
@@ -312,19 +356,29 @@ class EngineRouter:
             for t in tiers:
                 tier_index(t)                # unknown tier -> ValueError
             engines = len(tiers)
+            bank_tiers = list(tiers) + (list(self.spec_decode)
+                                        if self.spec_decode else [])
             weights = (params if isinstance(params, TieredWeights)
-                       else TieredWeights(params, tiers))
-            for t in tiers:
+                       else TieredWeights(params, bank_tiers))
+            for t in bank_tiers:
                 if t not in weights:
                     raise ValueError(
                         f"tier {t!r} has no bank in the supplied "
                         f"TieredWeights (has {list(weights.tier_names)})")
+            if self.spec_decode and self.spec_decode[1] not in tiers:
+                raise ValueError(
+                    f"spec_decode verify tier {self.spec_decode[1]!r} has "
+                    f"no replica in this fleet (tiers={list(tiers)}); the "
+                    "speculative pair accelerates the verify-tier class")
             self.tiered_weights: Optional[TieredWeights] = weights
             self.engines = [
-                ServingEngine(cfg, weights.for_tier(t),
-                              policy=make_tier_policy(t, backend=backend),
-                              max_slots=max_slots,
-                              kv_block_size=kv_block_size, **engine_kw)
+                spec_coordinator(weights, t)
+                if self.spec_decode and t == self.spec_decode[1]
+                else ServingEngine(
+                    cfg, weights.for_tier(t),
+                    policy=make_tier_policy(t, backend=backend),
+                    max_slots=max_slots,
+                    kv_block_size=kv_block_size, **engine_kw)
                 for t in tiers]
         else:
             if isinstance(self.routing, Tiered):
@@ -333,11 +387,28 @@ class EngineRouter:
                     "pass tiers=['fxp4', 'fxp8', ...]")
             if engines < 1:
                 raise ValueError("engines must be >= 1")
-            self.tiered_weights = None
-            self.engines = [
-                ServingEngine(cfg, params, max_slots=max_slots,
-                              kv_block_size=kv_block_size, **engine_kw)
-                for _ in range(engines)]
+            if self.spec_decode is not None:
+                if "policy" in engine_kw:
+                    raise ValueError(
+                        "pass either spec_decode (per-side policies "
+                        "derive from the tier pair) or policy, not both")
+                weights = (params if isinstance(params, TieredWeights)
+                           else TieredWeights(params, self.spec_decode))
+                for t in self.spec_decode:
+                    if t not in weights:
+                        raise ValueError(
+                            f"tier {t!r} has no bank in the supplied "
+                            f"TieredWeights (has "
+                            f"{list(weights.tier_names)})")
+                self.tiered_weights = weights
+                self.engines = [spec_coordinator(weights, self.spec_decode[1])
+                                for _ in range(engines)]
+            else:
+                self.tiered_weights = None
+                self.engines = [
+                    ServingEngine(cfg, params, max_slots=max_slots,
+                                  kv_block_size=kv_block_size, **engine_kw)
+                    for _ in range(engines)]
         self.max_slots = max_slots
         # tier class map: ladder tier -> replica indices serving it (all
         # replicas of an untiered homogeneous fleet still land here via
@@ -422,6 +493,15 @@ class EngineRouter:
         two live requests with one id would collide in the merged event
         stream (and share an RNG stream) regardless of which replicas
         they landed on."""
+        if self.spec_decode is not None:
+            s = request.sampling
+            if s.temperature > 0.0 or s.top_k > 0:
+                raise ValueError(
+                    "a spec_decode fleet serves greedy requests only "
+                    "(temperature<=0, top_k==0): speculative acceptance "
+                    "is defined against the verifier's argmax, and tier "
+                    "selection must never decide whether a request may "
+                    "sample")
         self.engines[0].sched.validate(request, check_tier=False)
         if request.tier is not None:
             tier_index(request.tier)         # unknown name -> ValueError
@@ -615,6 +695,18 @@ class EngineRouter:
             st["affinity_spill_rate"] = (self.routing.affinity_spills
                                          / max(routed, 1))
         st["tiers"] = [e.tier for e in self.engines]
+        if self.spec_decode is not None:
+            proposed = sum(s.get("spec_proposed", 0) for s in per)
+            accepted = sum(s.get("spec_accepted", 0) for s in per)
+            st["spec_decode"] = ":".join(self.spec_decode)
+            st["spec_k"] = self.spec_k
+            st["spec_proposed"] = proposed
+            st["spec_accepted"] = accepted
+            st["spec_acceptance_rate"] = accepted / max(proposed, 1)
+            st["spec_verify_steps"] = sum(s.get("spec_verify_steps", 0)
+                                          for s in per)
+            st["spec_rolled_back"] = sum(s.get("spec_rolled_back", 0)
+                                         for s in per)
         if self.tier_policy is not None:
             st["tier_threshold"] = self.tier_policy.threshold
             st["tier_pinned"] = self.tier_policy.pinned
@@ -630,6 +722,7 @@ class EngineRouter:
             "prefill_tokens_computed": s["prefill_tokens_computed"],
             "prefix_hit_rate": (s["prefix_tokens_reused"]
                                 / max(s["prompt_tokens"], 1)),
+            "spec_acceptance_rate": s.get("spec_acceptance_rate", 0.0),
             "dispatched": self.dispatched[i],
         } for i, s in enumerate(per)]
         return st

@@ -196,11 +196,16 @@ class Scheduler:
                 f"request needs {self.blocks_need(request)} KV blocks but "
                 f"the pool only has {self.num_blocks}")
 
-    def submit(self, request: Request, tick: int) -> int:
+    def submit(self, request: Request, tick: int,
+               check_tier: bool = True) -> int:
         """Validate and enqueue. Every check runs before any state
         mutates, so a rejected request can't leak an id, a queue entry,
-        or a `_submitted` timestamp."""
-        self.validate(request)
+        or a `_submitted` timestamp. `check_tier=False` skips the
+        tier-match check for callers that own tier placement themselves
+        (the speculative-decode coordinator mirrors every request into
+        its draft engine's scheduler, whose tier deliberately differs
+        from the tier the request was admitted under)."""
+        self.validate(request, check_tier=check_tier)
         if request.id is not None and request.id in self._active_ids:
             # two live requests with one id would share a fold_in RNG
             # stream and collide in the event stream
@@ -402,6 +407,34 @@ class Scheduler:
             self._ref[blk] += 1
             executor.write_table(b, len(slot.blocks), blk)
             slot.blocks.append(blk)
+
+    def rollback(self, b: int, new_len: int, executor):
+        """Truncate slot b's KV back to `new_len` logical positions:
+        shrink the length mirror and return every block past the new
+        boundary to the pool. Speculative decode uses this to discard a
+        rejected draft suffix. The popped blocks are always
+        generation-written and generated blocks are never offered to the
+        prefix cache (`register_prefix_blocks` stops at the prompt), so
+        each must be privately held by this slot alone — asserted,
+        because unwinding a *shared* block here would corrupt another
+        slot's KV. Positions in [new_len, old_len) inside the surviving
+        tail block are stale, which is fine: reads above a row's length
+        are masked, and the next write at position new_len overwrites in
+        place."""
+        slot = self.slots[b]
+        assert 0 < new_len <= slot.cache_len, (new_len, slot.cache_len)
+        slot.cache_len = new_len
+        executor.set_length(b, new_len)
+        if not self.paged:
+            return
+        keep = -(-new_len // self.kv_block_size)
+        while len(slot.blocks) > keep:
+            blk = slot.blocks.pop()
+            assert self._ref[blk] == 1 and not (
+                self._prefix is not None and self._prefix.holds(blk)), (
+                "speculative rollback popped a shared/cached block")
+            executor.clear_table_entry(b, len(slot.blocks))
+            self._unref(blk)
 
     def release(self, b: int, executor=None):
         """Free slot b (EOS / length / abort): refcounted block return —

@@ -32,6 +32,9 @@ class MockExecutor:
     def fork_block(self, src, dst):
         self.calls.append(("fork_block", src, dst))
 
+    def clear_table_entry(self, row, idx):
+        self.calls.append(("clear_table_entry", row, idx))
+
     def of(self, kind):
         return [c for c in self.calls if c[0] == kind]
 
@@ -140,6 +143,48 @@ def test_release_returns_blocks_refcounted():
     st = s.stats()
     assert st["held_blocks"] == 0 and st["free_blocks"] == 6
     assert st["committed_blocks"] == 0
+    s.check_invariants()
+
+
+def test_rollback_truncates_length_and_frees_tail_blocks():
+    """Speculative rollback: the length mirror clamps to the accepted
+    frontier, whole blocks past it pop back to the free list with their
+    table entries cleared to the sentinel, and a rollback inside the
+    last kept block touches no blocks at all."""
+    s = _sched(max_slots=1, kv_block_size=4, num_blocks=6, paged=True)
+    ex = MockExecutor()
+    s.submit(_req(0, 8, gen=8), tick=0)
+    s.admit(tick=0, executor=ex)
+    s.ensure_blocks(0, 14, ex)                    # 4 blocks: [0, 16) cover
+    s.slots[0].cache_len = 14
+    assert s.stats()["held_blocks"] == 4
+    ex.calls.clear()
+    s.rollback(0, 9, ex)                          # keep ceil(9/4) = 3
+    assert s.slots[0].cache_len == 9
+    assert ex.of("set_length") == [("set_length", 0, 9)]
+    assert ex.of("clear_table_entry") == [("clear_table_entry", 0, 3)]
+    st = s.stats()
+    assert st["held_blocks"] == 3 and st["free_blocks"] == 3
+    s.check_invariants()
+    ex.calls.clear()
+    s.rollback(0, 9, ex)                          # same frontier: no pops
+    assert ex.of("clear_table_entry") == []
+    assert s.stats()["held_blocks"] == 3
+    with pytest.raises(AssertionError):
+        s.rollback(0, 12, ex)                     # can't roll forward
+    s.check_invariants()
+
+
+def test_rollback_contiguous_only_clamps_length():
+    s, ex = _sched(max_slots=1), MockExecutor()
+    s.submit(_req(0, 8, gen=8), tick=0)
+    s.admit(tick=0, executor=ex)
+    s.slots[0].cache_len = 12
+    ex.calls.clear()
+    s.rollback(0, 10, ex)
+    assert s.slots[0].cache_len == 10
+    assert ex.of("set_length") == [("set_length", 0, 10)]
+    assert ex.of("clear_table_entry") == []
     s.check_invariants()
 
 

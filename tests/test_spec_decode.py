@@ -1,0 +1,295 @@
+"""Cross-tier speculative decoding tests: token identity vs the verify
+tier alone (all four cache families, contiguous / paged / prefix-cache
+CoW layouts), KV-rollback ledger invariants after rejected rounds, abort
+mid-speculation (queued and in-flight), EOS landing inside an accepted
+draft window, single/zero-proposal round edges, greedy-only submission,
+and the EngineRouter `spec_decode` composition with tiered fleets."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import tier_policy
+from repro.models import model as M
+from repro.serving import (EngineRouter, Request, SamplingParams,
+                           ServingEngine, SpecDecodeCoordinator)
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = ["qwen2_5_14b", "mamba2_370m", "zamba2_1p2b", "deepseek_moe_16b"]
+LAYOUTS = ["contig", "paged", "paged_prefix"]
+
+
+def _params(cfg):
+    return M.init_params(cfg, KEY, dtype=jnp.float32)
+
+
+def _prompt(i, plen, cfg, prefix=0):
+    """Random prompt; `prefix` prepends a shared (per-cfg deterministic)
+    system prompt so prefix-cache layouts exercise block sharing + CoW."""
+    key = jax.random.fold_in(jax.random.PRNGKey(1), i)
+    skey = jax.random.PRNGKey(7)
+    if cfg.input_mode == "tokens":
+        p = jax.random.randint(key, (plen,), 0, cfg.vocab)
+        if prefix:
+            p = jnp.concatenate(
+                [jax.random.randint(skey, (prefix,), 0, cfg.vocab), p])
+    else:
+        p = jax.random.normal(key, (plen, cfg.d_model), jnp.bfloat16)
+        if prefix:
+            p = jnp.concatenate(
+                [jax.random.normal(skey, (prefix, cfg.d_model),
+                                   jnp.bfloat16), p])
+    return p
+
+
+def _layout_kw(layout):
+    kw = dict(max_slots=2, max_len=28, prefill_chunk=4, seed=0)
+    if layout != "contig":
+        kw["kv_block_size"] = 4
+    if layout == "paged_prefix":
+        kw["prefix_cache"] = True
+    return kw
+
+
+def _requests(cfg, layout, n=4, gen=6, **rkw):
+    prefix = 8 if layout == "paged_prefix" else 0
+    plens = [5, 11, 8, 3, 9]
+    return [Request(prompt=_prompt(i, plens[i % 5], cfg, prefix=prefix),
+                    max_new_tokens=gen, id=i, **rkw) for i in range(n)]
+
+
+def _spec_pair(cfg, params, layout, k=4, **extra):
+    """Float verify (policy None — chunk-composition exact numerics, the
+    identity guarantee's precondition) + fxp4-policy draft over the SAME
+    float tree: proposals genuinely diverge, so acceptance AND rollback
+    both get exercised while the anchor comparison stays bit-meaningful."""
+    kw = _layout_kw(layout)
+    kw.update(extra)
+    return SpecDecodeCoordinator(cfg, params, params,
+                                 draft_policy=tier_policy("fxp4"),
+                                 verify_policy=None, k=k, **kw)
+
+
+def _anchor(cfg, params, layout, reqs, **extra):
+    kw = _layout_kw(layout)
+    kw.update(extra)
+    eng = ServingEngine(cfg, params, policy=None, **kw)
+    return {f.id: f.tokens for f in eng.run(reqs)}
+
+
+def _drain(co):
+    """Run the coordinator to idle, auditing every tick (the rollback
+    ledger contract) and returning terminal events by id."""
+    done = {}
+    while co.has_work():
+        for out in co.step():
+            if out.finished:
+                done[out.id] = out
+        co.check_invariants()
+    return done
+
+
+# ---------------------------------------------------------------------------
+# token identity vs the verify tier alone
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_decode_identity(arch, layout):
+    """Speculative greedy streams are token-identical to serving the
+    verify tier alone — every cache family (MHA / SSM / hybrid / MLA)
+    under contiguous, paged, and prefix-cache CoW layouts. SSM/hybrid
+    rows take the checkpoint->restore->replay rollback path."""
+    cfg = get_config(arch).reduced()
+    params = _params(cfg)
+    anchor = _anchor(cfg, params, layout, _requests(cfg, layout))
+    co = _spec_pair(cfg, params, layout)
+    for r in _requests(cfg, layout):
+        co.submit(r)
+    done = _drain(co)
+    assert {i: o.tokens for i, o in done.items()} == anchor
+    st = co.stats()
+    assert st["spec_verify_steps"] > 0 and st["spec_proposed"] > 0
+    assert 0 <= st["spec_accepted"] <= st["spec_proposed"]
+    # terminal events carry the per-request counters
+    for out in done.values():
+        assert out.spec_verify_steps > 0
+        assert out.spec_accepted <= out.spec_proposed
+    if layout == "paged_prefix" and not co.verify.ex.has_ssm:
+        # SSM/hybrid engines degrade prefix_cache to a no-op (the
+        # recurrence can't be entered mid-stream), so only attention-
+        # cache families actually reuse the shared system prompt
+        assert st["prefix_tokens_reused"] > 0
+
+
+# ---------------------------------------------------------------------------
+# KV rollback correctness
+# ---------------------------------------------------------------------------
+
+def test_rollback_keeps_block_ledger_consistent():
+    """Rejected suffixes actually roll back (an fxp4 draft over random
+    weights disagrees often) and every rollback round leaves the paged
+    ledger clean — free + held + cached == pool on BOTH engines, audited
+    each tick by _drain. After drain all blocks return to the free
+    lists."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    co = _spec_pair(cfg, params, "paged")
+    for r in _requests(cfg, "paged"):
+        co.submit(r)
+    _drain(co)
+    st = co.stats()
+    assert st["spec_rolled_back"] > 0, "workload never exercised rollback"
+    for sched in (co.verify.sched, co.draft.sched):
+        s = sched.stats()
+        assert s["held_blocks"] == 0
+        assert s["free_blocks"] + s["cached_blocks"] == s["kv_blocks"]
+
+
+def test_rollback_never_pops_prefix_shared_blocks():
+    """Prefix-cache CoW layout: generated blocks are never registered in
+    the prefix cache, so rollback only ever frees private blocks — the
+    scheduler asserts this on every pop; shared prompts + divergent
+    drafts make rollback land right behind CoW-forked tails."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    co = _spec_pair(cfg, params, "paged_prefix")
+    for r in _requests(cfg, "paged_prefix"):
+        co.submit(r)
+    _drain(co)
+    st = co.stats()
+    assert st["spec_rolled_back"] > 0
+    assert st["prefix_tokens_reused"] > 0
+
+
+def test_abort_queued_and_mid_speculation():
+    """Abort releases BOTH engines' slots and blocks whether the request
+    is still queued or mid-speculation; the freed capacity serves the
+    rest of the queue and the ledger drains clean."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    co = _spec_pair(cfg, params, "paged", max_slots=1)
+    reqs = _requests(cfg, "paged", n=3, gen=8)
+    for r in reqs:
+        co.submit(r)
+    # rid 2 never left the admission queue
+    assert co.abort(2)
+    # drive rid 0 into speculation (prompt 5 = two prefill chunks, then
+    # rounds), then abort it in flight
+    events = []
+    for _ in range(4):
+        events.extend(co.step())
+    assert any(o.id == 0 and o.new_tokens and not o.finished
+               for o in events), "rid 0 never reached speculation"
+    assert co.abort(0)
+    co.check_invariants()
+    assert co.verify.sched.slots[0] is None
+    assert co.draft.sched.slots[0] is None
+    done = _drain(co)
+    done.update({o.id: o for o in events if o.finished})
+    assert done[0].finish_reason == "aborted"
+    assert done[0].tokens, "in-flight abort should carry accepted tokens"
+    assert done[2].finish_reason == "aborted" and not done[2].tokens
+    assert done[1].finish_reason == "length"
+    # the aborted slots' blocks all returned
+    for sched in (co.verify.sched, co.draft.sched):
+        assert sched.stats()["held_blocks"] == 0
+    assert not co.abort(99)
+
+
+def test_eos_inside_accepted_window():
+    """An EOS emitted anywhere inside an accepted draft window truncates
+    the emission at EOS and finishes the request — token-identical to
+    the verify tier alone under the same eos_id."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    plain = _anchor(cfg, params, "paged",
+                    _requests(cfg, "paged", n=2, gen=8))
+    # pick an eos the anchor actually emits mid-stream for request 0
+    eos = plain[0][2]
+    reqs = lambda: _requests(cfg, "paged", n=2, gen=8, eos_id=eos)  # noqa: E731
+    anchor = _anchor(cfg, params, "paged", reqs())
+    assert anchor[0] == plain[0][:plain[0].index(eos) + 1]
+    co = _spec_pair(cfg, params, "paged")
+    for r in reqs():
+        co.submit(r)
+    done = _drain(co)
+    assert {i: o.tokens for i, o in done.items()} == anchor
+    assert done[0].finish_reason == "eos"
+    assert done[0].tokens[-1] == eos
+
+
+def test_single_and_zero_proposal_rounds():
+    """Budget edges: max_new_tokens=1 finishes at the prefill seed (no
+    speculative round), =2 forces k_row=0 verify-only rounds; both match
+    the anchor's prefixes."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    anchor = _anchor(cfg, params, "contig",
+                     _requests(cfg, "contig", n=2, gen=6))
+    for gen in (1, 2):
+        co = _spec_pair(cfg, params, "contig")
+        for r in _requests(cfg, "contig", n=2, gen=gen):
+            co.submit(r)
+        done = _drain(co)
+        assert {i: o.tokens for i, o in done.items()} == {
+            i: t[:gen] for i, t in anchor.items()}
+
+
+def test_submit_and_ctor_validation():
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    co = _spec_pair(cfg, params, "contig")
+    with pytest.raises(ValueError, match="greedy"):
+        co.submit(Request(prompt=_prompt(0, 4, cfg), max_new_tokens=4,
+                          sampling=SamplingParams(temperature=0.5)))
+    with pytest.raises(ValueError, match="greedy"):
+        co.submit(Request(prompt=_prompt(0, 4, cfg), max_new_tokens=4,
+                          sampling=SamplingParams(top_k=8)))
+    with pytest.raises(ValueError, match="k"):
+        _spec_pair(cfg, params, "contig", k=0)
+    with pytest.raises(ValueError, match="verify window"):
+        _spec_pair(cfg, params, "contig", k=6)   # prefill_chunk=4 -> k<=5
+
+
+# ---------------------------------------------------------------------------
+# router composition
+# ---------------------------------------------------------------------------
+
+def test_router_spec_decode_tiered_identity():
+    """--tiers + --spec-decode: only the verify-tier class turns
+    speculative and pins routed there stream token-identical to a plain
+    tiered fleet's verify replica."""
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    kw = dict(max_slots=2, max_len=28, prefill_chunk=4, seed=0)
+    reqs = lambda: [Request(prompt=_prompt(i, p, cfg), max_new_tokens=6,  # noqa: E731
+                            tier="bf16") for i, p in enumerate([5, 11, 8])]
+    plain = EngineRouter(cfg, params, tiers=["fxp4", "bf16"],
+                         routing="tiered", **kw)
+    anchor = {f.id: f.tokens for f in plain.run(reqs())}
+    spec = EngineRouter(cfg, params, tiers=["fxp4", "bf16"],
+                        routing="tiered", spec_decode="fxp4:bf16",
+                        spec_k=3, **kw)
+    got = {f.id: f.tokens for f in spec.run(reqs())}
+    spec.check_invariants()
+    assert got == anchor
+    st = spec.stats()
+    assert st["spec_decode"] == "fxp4:bf16" and st["spec_verify_steps"] > 0
+    # greedy-only is fleet-wide under spec_decode
+    with pytest.raises(ValueError, match="greedy"):
+        spec.submit(Request(prompt=_prompt(0, 4, cfg), max_new_tokens=4,
+                            sampling=SamplingParams(temperature=1.0)))
+
+
+def test_router_spec_decode_validation():
+    cfg = get_config("qwen2_5_14b").reduced()
+    params = _params(cfg)
+    kw = dict(max_slots=2, max_len=28, prefill_chunk=4)
+    with pytest.raises(ValueError, match="draft:verify"):
+        EngineRouter(cfg, params, engines=1, spec_decode="fxp4", **kw)
+    with pytest.raises(ValueError, match="below"):
+        EngineRouter(cfg, params, engines=1, spec_decode="bf16:fxp4", **kw)
+    with pytest.raises(ValueError, match="no replica"):
+        EngineRouter(cfg, params, tiers=["fxp4", "fxp8"],
+                     spec_decode="fxp4:bf16", **kw)
